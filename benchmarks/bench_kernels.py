@@ -1,0 +1,82 @@
+"""Kernel micro-benchmarks: wall time of the XLA oracle paths (the compiled
+reality on CPU) + interpret-mode correctness deltas for the Pallas kernels.
+
+On-TPU wall-time comparison is not possible in this container; what IS
+measured: oracle wall time (what the benchmark harness actually runs) and
+max|kernel - oracle| in interpret mode (correctness evidence).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import covariance, flash_attention, procrustes_align, ref
+
+
+def _wall(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def kernel_gram():
+    for n, d in ((1024, 256), (4096, 512)):
+        x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+        oracle = jax.jit(ref.gram)
+        us = _wall(oracle, x)
+        err = float(
+            jnp.abs(
+                covariance.gram(x, bn=128, bd=128, interpret=True) - ref.gram(x)
+            ).max()
+        )
+        emit(f"kernel_gram[n={n},d={d}]", us, f"interpret_err={err:.2e}")
+
+
+def kernel_procrustes():
+    m, d, r = 16, 2048, 64
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    vs = jax.random.normal(k1, (m, d, r))
+    rf = jax.random.normal(k2, (d, r))
+    zs = jax.random.normal(k3, (m, r, r))
+    us1 = _wall(jax.jit(ref.batched_gram), vs, rf)
+    us2 = _wall(jax.jit(ref.align_average), vs, zs)
+    e1 = float(
+        jnp.abs(
+            procrustes_align.batched_gram(vs, rf, interpret=True)
+            - ref.batched_gram(vs, rf)
+        ).max()
+    )
+    e2 = float(
+        jnp.abs(
+            procrustes_align.align_average(vs, zs, interpret=True)
+            - ref.align_average(vs, zs)
+        ).max()
+    )
+    emit(f"kernel_batched_gram[m={m},d={d},r={r}]", us1, f"interpret_err={e1:.2e}")
+    emit(f"kernel_align_average[m={m},d={d},r={r}]", us2, f"interpret_err={e2:.2e}")
+
+
+def kernel_flash():
+    b, hq, hkv, s, hd = 1, 8, 2, 1024, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, hq, s, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, s, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, s, hd), jnp.float32)
+    oracle = jax.jit(lambda q, k, v: ref.attention(q, k, v, causal=True))
+    us = _wall(oracle, q, k, v)
+    got = flash_attention.flash_attention(
+        q[:, :, :256], k[:, :, :256], v[:, :, :256], bq=128, bk=128, interpret=True
+    )
+    err = float(
+        jnp.abs(
+            got - ref.attention(q[:, :, :256], k[:, :, :256], v[:, :, :256])
+        ).max()
+    )
+    emit(f"kernel_flash[s={s},hq={hq}]", us, f"interpret_err={err:.2e}")

@@ -1,0 +1,78 @@
+"""Shared benchmark utilities: problem generation + timing + CSV emission.
+
+Benchmarks are CPU-budgeted reductions of the paper's experiments: same
+models (M1/M2, D_k), same estimators, smaller (d, m, n, reps) grids.  Every
+bench prints ``name,us_per_call,derived`` CSV rows (one per configuration)
+so `python -m benchmarks.run` output is machine-readable.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    central_estimate,
+    dist_2,
+    empirical_covariance,
+    iterative_refinement,
+    local_bases,
+    naive_average,
+    procrustes_fix_average,
+    projector_average,
+)
+from repro.data import synthetic as syn
+
+
+def make_problem(seed, d, r, m, n, *, delta=0.2, model="m1", r_star=None):
+    """Returns (v_true, covs (m,d,d))."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    if model == "m1":
+        tau = syn.spectrum_m1(d, r, delta=delta)
+    else:
+        tau = syn.spectrum_m2(d, r, r_star, delta=delta)
+    sigma, u, factor = syn.covariance_from_spectrum(k1, tau)
+    keys = jax.random.split(k2, m)
+    xs = jnp.stack([syn.sample_gaussian(k, factor, n) for k in keys])
+    covs = jax.vmap(lambda x: empirical_covariance(x))(xs)
+    return u[:, :r], covs
+
+
+ESTIMATORS: Dict[str, Callable] = {
+    "central": lambda covs, r, v1: central_estimate(covs, r)[0],
+    "aligned": lambda covs, r, v1: procrustes_fix_average(local_bases(covs, r)),
+    "refined5": lambda covs, r, v1: iterative_refinement(local_bases(covs, r), 5),
+    "naive": lambda covs, r, v1: naive_average(local_bases(covs, r)),
+    "projavg": lambda covs, r, v1: projector_average(local_bases(covs, r), r),
+    "local0": lambda covs, r, v1: local_bases(covs, r)[0],
+}
+
+
+def median_errors(
+    seeds: Iterable[int], d, r, m, n, *, estimators=("central", "aligned"),
+    timing_for: str = "aligned", **kw,
+) -> Tuple[Dict[str, float], float]:
+    """Median subspace error per estimator over seeds + wall us for one."""
+    errs = {e: [] for e in estimators}
+    wall = []
+    for s in seeds:
+        v1, covs = make_problem(s, d, r, m, n, **kw)
+        for e in estimators:
+            t0 = time.perf_counter()
+            v = ESTIMATORS[e](covs, r, v1)
+            v.block_until_ready()
+            dt = time.perf_counter() - t0
+            if e == timing_for:
+                wall.append(dt)
+            errs[e].append(float(dist_2(v, v1)))
+    med = {e: float(np.median(v)) for e, v in errs.items()}
+    return med, float(np.median(wall) * 1e6) if wall else 0.0
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,53 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="skip the slower sweeps")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import bench_comm as C
+    from benchmarks import bench_figs as F
+    from benchmarks import bench_kernels as K
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    benches = [
+        F.fig1_mnist_like,
+        F.fig2_mn_sweep,
+        F.fig3_fixed_budget,
+        F.fig4_refinement,
+        F.fig5_intdim,
+        F.fig6_rank_sweep,
+        F.fig7_nongaussian,
+        F.fig8_theory_envelope,
+        F.table2_embeddings,
+        F.fig10_quadratic_sensing,
+        F.remark1_cost,
+        K.kernel_gram,
+        K.kernel_procrustes,
+        K.kernel_flash,
+        C.comm_table,
+        C.comm_measured,
+    ]
+    if args.quick:
+        benches = [F.fig1_mnist_like, F.fig3_fixed_budget, K.kernel_gram]
+    for b in benches:
+        try:
+            b()
+        except Exception as e:  # keep the harness going; record the failure
+            print(f"{b.__name__},0,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
+            raise
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

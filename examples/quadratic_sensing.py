@@ -1,0 +1,45 @@
+"""Paper §3.7: distributed spectral initialization for quadratic sensing.
+
+Measurements y_i = ||X#^T a_i||^2 are scattered across the mesh's data axis;
+each shard forms the truncated second-moment matrix D_N and the mesh
+combines local eigenspaces with Algorithm 2 (n_iter=10, as in Fig. 10).
+
+Run:  PYTHONPATH=src python examples/quadratic_sensing.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import synthetic as syn
+from repro.launch.mesh import make_host_mesh
+from repro.optim.spectral_init import distributed_spectral_init
+
+
+def main():
+    d, r = 100, 5
+    mesh = make_host_mesh(model=1)
+    m = mesh.shape["data"]
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+
+    # ground truth X# with orthonormal columns
+    g = jax.random.normal(k1, (d, r))
+    x_sharp, _ = jnp.linalg.qr(g)
+
+    for i in (1, 2, 4, 8):
+        n = i * r * d  # per-machine samples, as in Fig. 10's x-axis
+        a, y = syn.quadratic_sensing_measurements(k2, x_sharp, m * n)
+        x0 = distributed_spectral_init(a, y, r, mesh, n_iter=10)
+        # distance used in the paper: ||(I - X# X#^T) X0||_2
+        resid = x0 - x_sharp @ (x_sharp.T @ x0)
+        err = float(jnp.linalg.norm(resid, ord=2))
+        print(f"n = {i}·r·d = {n:6d} per machine ({m} machines): "
+              f"||(I-P)X0||_2 = {err:.4f}")
+
+
+if __name__ == "__main__":
+    main()

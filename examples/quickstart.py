@@ -1,0 +1,61 @@
+"""Quickstart: communication-efficient distributed PCA in ~40 lines.
+
+Reproduces the paper's headline result on a synthetic problem: Algorithm 1
+(Procrustes fixing) matches the centralized estimator, while naive averaging
+collapses.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+
+# Give this example 8 fake devices so the mesh has a real data axis.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    central_estimate,
+    dist_2,
+    distributed_pca,
+    empirical_covariance,
+    local_bases,
+    naive_average,
+)
+from repro.data import synthetic as syn
+from repro.launch.mesh import make_host_mesh
+
+
+def main():
+    d, r, n_per_machine = 300, 8, 400  # the paper's Section 3.1 scale
+    mesh = make_host_mesh(model=1)  # all devices on the 'data' axis
+    m = mesh.shape["data"]
+    print(f"mesh: {m} machines x {n_per_machine} samples, d={d}, r={r}")
+
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    tau = syn.spectrum_m1(d, r, delta=0.2)  # eigengap exactly 0.2 (model M1)
+    sigma, u, factor = syn.covariance_from_spectrum(k1, tau)
+    v_true = u[:, :r]
+    samples = syn.sample_gaussian(k2, factor, m * n_per_machine)
+
+    # --- the paper's algorithm, one-shot across the mesh -------------------
+    v_aligned = distributed_pca(samples, mesh, r, n_iter=1)          # Alg 1
+    v_refined = distributed_pca(samples, mesh, r, n_iter=5)          # Alg 2
+
+    # --- baselines ----------------------------------------------------------
+    covs = jax.vmap(lambda x: empirical_covariance(x))(
+        samples.reshape(m, n_per_machine, d)
+    )
+    v_central, _ = central_estimate(covs, r)
+    v_naive = naive_average(local_bases(covs, r))
+
+    print(f"dist(central, truth)   = {float(dist_2(v_central, v_true)):.4f}")
+    print(f"dist(Alg 1,   truth)   = {float(dist_2(v_aligned, v_true)):.4f}")
+    print(f"dist(Alg 2,   truth)   = {float(dist_2(v_refined, v_true)):.4f}")
+    print(f"dist(naive,   truth)   = {float(dist_2(v_naive, v_true)):.4f}   <- collapses")
+
+
+if __name__ == "__main__":
+    main()

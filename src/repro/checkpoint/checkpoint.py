@@ -1,0 +1,167 @@
+"""Checkpointing: per-host npz shards + JSON manifest, async save, elastic
+restore.
+
+Layout:  <dir>/step_<N>/host_<i>.npz  +  <dir>/step_<N>/manifest.json
+Leaves are addressed by their pytree key-path string, so structure changes
+are detected at load.  ``load_checkpoint`` re-shards onto whatever mesh the
+restoring job runs (elastic resume: device count may differ).  Writes go to
+a temp dir renamed into place, so a crash mid-save never corrupts the latest
+complete checkpoint; ``gc_keep`` bounds disk usage.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _leafdict(tree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(k): v for k, v in flat}
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    tree,
+    *,
+    extra: Optional[Dict[str, Any]] = None,
+    process_index: Optional[int] = None,
+) -> str:
+    """Synchronous save of this host's addressable data."""
+    pid = jax.process_index() if process_index is None else process_index
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + f".tmp{pid}"
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _leafdict(tree)
+    arrays = {}
+    for k, v in leaves.items():
+        arrays[k] = np.asarray(jax.device_get(v))
+    np.savez(os.path.join(tmp, f"host_{pid}.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "time": time.time(),
+        "num_hosts": jax.process_count(),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    # Atomic publish (single-host container; multi-host would barrier here).
+    if os.path.isdir(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp0"):
+            path = os.path.join(directory, name, _MANIFEST)
+            if os.path.exists(path):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def load_checkpoint(
+    directory: str,
+    step: int,
+    like_tree,
+    *,
+    shardings=None,
+):
+    """Restore into the structure of ``like_tree`` (values or SDS pytree).
+
+    ``shardings``: optional pytree of NamedSharding matching like_tree — the
+    elastic-resume path: arrays are device_put onto the CURRENT mesh, which
+    may have a different device count than the mesh that saved them.
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "host_0.npz"))
+    want = _leafdict(like_tree)
+    missing = sorted(set(want) - set(data.files))
+    extra_keys = sorted(set(data.files) - set(want))
+    if missing or extra_keys:
+        raise ValueError(
+            f"checkpoint structure mismatch: missing={missing[:5]} extra={extra_keys[:5]}"
+        )
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves = [s for _, s in jax.tree_util.tree_flatten_with_path(shardings)[0]]
+    out = []
+    for i, (k, leaf) in enumerate(flat):
+        arr = data[jax.tree_util.keystr(k)]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {jax.tree_util.keystr(k)}")
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+class CheckpointManager:
+    """Async checkpointing: device_get on the caller thread (cheap on CPU,
+    DMA on TPU), serialisation + disk IO on a background thread — the train
+    loop never blocks on the filesystem.  ``gc_keep`` prunes old steps."""
+
+    def __init__(self, directory: str, *, every: int = 100, gc_keep: int = 3):
+        self.directory = directory
+        self.every = every
+        self.gc_keep = gc_keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def maybe_save(self, step: int, tree, *, extra=None, force=False) -> bool:
+        if not force and (self.every <= 0 or step % self.every != 0):
+            return False
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree, extra=extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        return True
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_") and "." not in n
+        )
+        for s in steps[: -self.gc_keep]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True
+            )
+
+    def restore_latest(self, like_tree, *, shardings=None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None, None
+        tree, manifest = load_checkpoint(
+            self.directory, step, like_tree, shardings=shardings
+        )
+        return step, tree, manifest

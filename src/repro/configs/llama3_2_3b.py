@@ -1,0 +1,36 @@
+"""Llama-3.2-3B — small llama3 [hf:meta-llama/Llama-3.2-1B; unverified].
+
+28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256.
+24 Q-heads are not divisible by the 16-way model axis: the sharding rules
+replicate the head dims and keep TP on d_ff / vocab (DESIGN.md §7).
+"""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b",
+    family="dense",
+    num_layers=28,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=128256,
+    rope_theta=500000.0,
+    fsdp=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2,
+        d_model=96,
+        num_heads=6,
+        num_kv_heads=2,
+        d_ff=256,
+        vocab_size=512,
+        remat="none",
+    )

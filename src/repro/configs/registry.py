@@ -1,0 +1,36 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+# arch id -> module name
+ARCHS: Dict[str, str] = {
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "internlm2-20b": "internlm2_20b",
+    "chatglm3-6b": "chatglm3_6b",
+    "llama3.2-3b": "llama3_2_3b",
+    "granite-3-2b": "granite_3_2b",
+    "internvl2-2b": "internvl2_2b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "whisper-tiny": "whisper_tiny",
+    "mamba2-370m": "mamba2_370m",
+}
+
+
+def _module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_reduced_config(arch: str) -> ModelConfig:
+    return _module(arch).reduced()

@@ -1,0 +1,40 @@
+"""Whisper-tiny — enc-dec, conv frontend stubbed [arXiv:2212.04356; unverified].
+
+4L enc + 4L dec, d_model=384 6H (kv=6) d_ff=1536 vocab=51865.  Frame
+embeddings come precomputed from ``input_specs()`` (conv stack stub).
+Tiny model: eigen-compression off by default (overhead > win).
+"""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    is_encoder_decoder=True,
+    num_encoder_layers=4,
+    gated_mlp=False,  # whisper uses plain GELU MLPs
+    fsdp=False,
+    eigen_compress=False,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2,
+        num_encoder_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=128,
+        vocab_size=512,
+        remat="none",
+    )

@@ -1,0 +1,32 @@
+"""Empirical covariance / second-moment formation.
+
+``empirical_covariance`` is the local hot spot of distributed PCA (a rank-n
+Gram update).  The Pallas TPU kernel lives in ``repro.kernels.covariance``;
+this module is the pure-XLA path and the single switch point between them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["empirical_covariance"]
+
+
+def empirical_covariance(
+    x: jax.Array, *, use_kernel: bool = False, interpret: bool = False
+) -> jax.Array:
+    """(1/n) X^T X for samples X of shape (n, d), accumulated in f32.
+
+    Args:
+      x: (n, d) sample matrix (zero-mean assumed, per the paper).
+      use_kernel: route through the Pallas Gram kernel (TPU target;
+        ``interpret=True`` executes it on CPU for validation).
+    """
+    n = x.shape[0]
+    if use_kernel:
+        from repro.kernels import covariance as _cov_kernel
+
+        return _cov_kernel.gram(x, interpret=interpret) / n
+    xf = x.astype(jnp.float32)
+    return (xf.T @ xf) / n

@@ -1,0 +1,106 @@
+"""Distributed eigenspace estimators (serial reference implementations).
+
+Implements the paper's Algorithm 1 (Procrustes fixing) and Algorithm 2
+(iterative refinement), the naive-averaging strawman, the centralized
+estimator, and the spectral-projector-averaging baseline of Fan et al. 2019
+("[20]" in the paper).  These are the oracles the ``shard_map`` runtime in
+``repro.core.distributed`` is tested against, and what the paper-figure
+benchmarks run.
+
+All functions take local solutions as a stacked array ``vs`` of shape
+(m, d, r) — machine-major — and are jit-friendly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import procrustes
+from repro.core.subspace import local_eigenbasis
+
+__all__ = [
+    "qr_orthonormalize",
+    "naive_average",
+    "procrustes_fix_average",
+    "iterative_refinement",
+    "projector_average",
+    "central_estimate",
+    "local_bases",
+]
+
+
+def qr_orthonormalize(v: jax.Array) -> jax.Array:
+    """Q factor of the thin QR of ``v`` (the paper's final step)."""
+    q, _ = jnp.linalg.qr(v)
+    return q
+
+
+def local_bases(
+    xhats: jax.Array, r: int, *, method: str = "eigh", iters: int = 30
+) -> jax.Array:
+    """Compute each machine's leading r-dim eigenbasis. xhats: (m, d, d)."""
+    f = lambda x: local_eigenbasis(x, r, method=method, iters=iters)[0]
+    return jax.vmap(f)(xhats)
+
+
+def naive_average(vs: jax.Array) -> jax.Array:
+    """Eq. (3): average the raw local bases, then orthonormalize.
+
+    The strawman the paper shows fails: with adversarial (or random) rotations
+    the average can collapse toward zero / an arbitrary subspace.
+    """
+    return qr_orthonormalize(jnp.mean(vs, axis=0))
+
+
+def procrustes_fix_average(
+    vs: jax.Array, ref: jax.Array | None = None
+) -> jax.Array:
+    """Algorithm 1: Procrustes-fix every local basis to ``ref``, average, QR.
+
+    Args:
+      vs:  (m, d, r) stacked local solutions.
+      ref: (d, r) reference solution; defaults to ``vs[0]`` per the paper.
+    """
+    if ref is None:
+        ref = vs[0]
+    aligned = procrustes.align_batch(vs, ref)
+    return qr_orthonormalize(jnp.mean(aligned, axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("n_iter",))
+def iterative_refinement(vs: jax.Array, n_iter: int = 2) -> jax.Array:
+    """Algorithm 2: repeat Algorithm 1, re-using the output as the reference.
+
+    ``n_iter=1`` is exactly Algorithm 1 with the default reference.
+    """
+    ref = vs[0]
+    for _ in range(max(n_iter, 1)):
+        ref = procrustes_fix_average(vs, ref)
+    return ref
+
+
+def projector_average(vs: jax.Array, r: int) -> jax.Array:
+    """Fan et al. 2019 baseline: average spectral projectors, take top-r.
+
+    Forms ``(1/m) sum_i V_i V_i^T`` (d x d) and returns its leading r-dim
+    eigenspace.  O(m d^2 r) — the cost the paper's Remark 1 contrasts with.
+    """
+    m, d, _ = vs.shape
+    p = jnp.einsum("mdr,mer->de", vs, vs) / m
+    lam, vec = jnp.linalg.eigh(p)
+    return vec[:, ::-1][:, :r]
+
+
+def central_estimate(
+    xhats: jax.Array, r: int, *, method: str = "eigh", iters: int = 30
+) -> Tuple[jax.Array, jax.Array]:
+    """Centralized oracle: top-r eigenspace of the mean of the local matrices.
+
+    In the distributed-PCA setting this is the estimator with access to all
+    ``m * n`` samples (the paper's "Central" label).
+    """
+    return local_eigenbasis(jnp.mean(xhats, axis=0), r, method=method, iters=iters)

@@ -1,0 +1,71 @@
+"""Orthogonal Procrustes alignment — the paper's core primitive.
+
+The paper (eq. (5)/(6)) aligns a local solution ``src`` with a reference
+``ref`` by solving
+
+    Z = argmin_{Z in O_r} || src @ Z - ref ||_F
+
+whose closed form is ``Z = U @ Wt`` where ``U, S, Wt = svd(src.T @ ref)``
+(Higham 1988; Golub & Van Loan ch. 6.4).  For ``r == 1`` this reduces to the
+sign-fixing scheme of Garber et al. (2017):
+
+    Z = sign(<src, ref>).
+
+Everything here is pure ``jnp`` and jittable; the batched Gram stage has a
+Pallas kernel counterpart in ``repro.kernels.procrustes_align``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "procrustes_rotation",
+    "align",
+    "align_batch",
+    "sign_fix",
+    "procrustes_distance",
+]
+
+
+def procrustes_rotation(src: jax.Array, ref: jax.Array) -> jax.Array:
+    """Return the orthogonal ``Z`` (r x r) minimising ``||src @ Z - ref||_F``.
+
+    Args:
+      src: (d, r) matrix with (approximately) orthonormal columns.
+      ref: (d, r) reference matrix.
+    """
+    g = src.T @ ref  # (r, r) Gram matrix -- the only O(d) stage.
+    u, _, wt = jnp.linalg.svd(g, full_matrices=False)
+    return u @ wt
+
+
+def align(src: jax.Array, ref: jax.Array) -> jax.Array:
+    """Procrustes-align ``src`` to ``ref``: returns ``src @ Z``."""
+    return src @ procrustes_rotation(src, ref)
+
+
+def align_batch(srcs: jax.Array, ref: jax.Array) -> jax.Array:
+    """Align a stack of local solutions (m, d, r) to a common reference (d, r)."""
+    return jax.vmap(lambda v: align(v, ref))(srcs)
+
+
+def sign_fix(src: jax.Array, ref: jax.Array) -> jax.Array:
+    """Rank-1 special case (Garber et al.): flip ``src`` to match ``ref``'s sign.
+
+    Accepts vectors of shape (d,) or single-column matrices (d, 1).
+    """
+    ip = jnp.sum(src * ref.reshape(src.shape))
+    s = jnp.where(ip >= 0, 1.0, -1.0).astype(src.dtype)
+    return src * s
+
+
+def procrustes_distance(a: jax.Array, b: jax.Array) -> jax.Array:
+    """min_Z ||a Z - b||_F over orthogonal Z.
+
+    Equals ``sqrt(||a||_F^2 + ||b||_F^2 - 2 * ||a^T b||_*)`` (nuclear norm).
+    """
+    s = jnp.linalg.svd(a.T @ b, compute_uv=False)
+    sq = (jnp.sum(a * a) + jnp.sum(b * b) - 2.0 * jnp.sum(s))
+    return jnp.sqrt(jnp.maximum(sq, 0.0))

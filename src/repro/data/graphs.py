@@ -1,0 +1,53 @@
+"""Graph data + HOPE node embeddings for the paper's §3.6 experiment.
+
+Wikipedia/PPI are not available offline; benchmarks substitute stochastic
+block-model graphs (networkx) and say so.  The HOPE method itself (Katz
+proximity S = (I - beta A)^{-1} beta A factorised by SVD) is implemented in
+full, plus the censored-graph observation model of the paper.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def sbm_graph(
+    rng: np.random.Generator,
+    n_nodes: int = 300,
+    n_blocks: int = 6,
+    p_in: float = 0.12,
+    p_out: float = 0.01,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Adjacency matrix + block labels of a stochastic block model."""
+    labels = rng.integers(0, n_blocks, size=n_nodes)
+    probs = np.where(labels[:, None] == labels[None, :], p_in, p_out)
+    upper = rng.random((n_nodes, n_nodes)) < probs
+    adj = np.triu(upper, 1)
+    adj = (adj | adj.T).astype(np.float64)
+    return adj, labels
+
+
+def censor_graph(rng: np.random.Generator, adj: np.ndarray, p: float) -> np.ndarray:
+    """Hide each edge independently with probability p (paper's model)."""
+    mask = np.triu(rng.random(adj.shape) >= p, 1)
+    keep = adj * (mask | mask.T)
+    return keep
+
+
+def hope_embedding(adj: np.ndarray, dim: int, beta: float = 0.1) -> np.ndarray:
+    """HOPE (Ou et al. 2016) with Katz proximity.
+
+    S = (I - beta A)^{-1} (beta A);  U_s sqrt(Sig) / V_s sqrt(Sig) are the
+    source/target embeddings; we return the source embedding (n, dim), which
+    is defined up to the orthogonal ambiguity the paper exploits.
+    """
+    n = adj.shape[0]
+    m_g = np.eye(n) - beta * adj
+    m_l = beta * adj
+    s = np.linalg.solve(m_g, m_l)
+    u, sig, vt = np.linalg.svd(s)
+    u = u[:, :dim]
+    sig = sig[:dim]
+    return u * np.sqrt(sig)[None, :]

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  covariance.py       — tiled Gram matrix X^T X (local covariance)
+  procrustes_align.py — batched Gram + aligned-average stages of Algorithm 1
+  flash_attention.py  — causal/sliding-window GQA flash attention (fwd)
+
+Each kernel has a pure-jnp oracle in ref.py and a dispatching wrapper in
+ops.py; tests sweep shapes/dtypes in interpret mode against the oracles.
+"""

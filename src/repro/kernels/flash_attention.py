@@ -1,0 +1,203 @@
+"""Pallas TPU kernel: causal / sliding-window GQA flash attention (forward).
+
+The perf-critical compute layer of the assigned LM architectures (train and
+prefill shapes).  Streaming-softmax over KV blocks with f32 running
+statistics; GQA is handled in the BlockSpec index maps (each Q head reads its
+grouped KV head — no materialised ``repeat``).
+
+Grid: (batch * q_heads, S/bq, T/bk) — the KV loop is the sequential minor
+dimension.  Scratch (VMEM): running max m (bq, 128), running sum l (bq, 128)
+(lane-replicated per TPU layout rules), and the f32 accumulator (bq, head_dim).
+
+Causal and window masks are applied per-block; fully-masked KV blocks skip
+the MXU work entirely via ``pl.when`` (for causal attention this halves the
+executed FLOPs — the roofline counts HLO FLOPs of the XLA path, so the win
+shows up on real hardware, not in cost_analysis).
+
+VMEM per step (bq=512, bk=512, D=128, bf16 in / f32 acc):
+  q 512*128*2 + k/v 2*512*128*2 + acc 512*128*4 + m/l 2*512*128*4 ≈ 1.1 MiB.
+
+Backward pass: not a kernel — training uses the XLA path (ref oracle) under
+``jax.checkpoint``; the flash kernel serves inference/prefill.  This is
+recorded in DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_LANES = 128
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    bq: int,
+    bk: int,
+    causal: bool,
+    window: int | None,
+    t_offset: int,
+    t_real: int,
+    num_kv_blocks: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Query positions are right-aligned against the KV timeline (decode /
+    # prefix-cache case): q_pos = t_offset + iq*bq + arange(bq).
+    q_pos = t_offset + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # Block-level relevance: skip the MXU entirely for fully-masked blocks.
+    q_lo = t_offset + iq * bq
+    q_hi = q_lo + bq - 1
+    k_lo = ik * bk
+    relevant = k_lo < t_real  # block contains at least one real key
+    if causal:
+        relevant &= q_hi >= k_lo  # some key not in the future
+    if window is not None:
+        k_hi = k_lo + bk - 1
+        relevant &= (q_lo - k_hi) < window  # some key inside the window
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        mask = jnp.ones((bq, bk), dtype=bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        mask &= k_pos < t_real  # right-padded keys are not real
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[:, :1]  # (bq, 1), lane-replicated storage
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)  # rescale old stats
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        p = jnp.where(mask, p, 0.0)
+        l_new = alpha * l_scr[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zeros, not NaN
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash attention forward.
+
+    q: (b, hq, s, d); k, v: (b, hkv, t, d) with hq % hkv == 0.
+    When s != t the queries are right-aligned (suffix of the KV timeline).
+    Scaling 1/sqrt(d) is applied here.  Returns (b, hq, s, d) in q.dtype.
+    """
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    bq = min(bq, s)
+    bk = min(bk, t)
+    s_pad = (-s) % bq
+    t_pad = (-t) % bk
+    if s_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+    if t_pad:
+        # Pad keys on the RIGHT; padded keys are masked via k_pos < t_real.
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+    sp = q.shape[2]
+    tp = k.shape[2]
+    # Real query i sits at KV-timeline position (t - s) + i (right-aligned
+    # against the REAL keys).  Trailing padded query rows get positions past
+    # the real timeline; their outputs are sliced away below.
+    t_offset = t - s
+
+    scale = 1.0 / (d**0.5)
+    q = (q.astype(jnp.float32) * scale).astype(q.dtype)
+
+    grid = (b * hq, sp // bq, tp // bk)
+    kernel = functools.partial(
+        _flash_kernel,
+        bq=bq,
+        bk=bk,
+        causal=causal,
+        window=window,
+        t_offset=t_offset,
+        t_real=t,
+        num_kv_blocks=tp // bk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, bq, d), lambda bh, iq, ik: (bh // hq, bh % hq, iq, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, d),
+                lambda bh, iq, ik: (bh // hq, (bh % hq) // group, ik, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, d),
+                lambda bh, iq, ik: (bh // hq, (bh % hq) // group, ik, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, d), lambda bh, iq, ik: (bh // hq, bh % hq, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if s_pad:
+        out = out[:, :, :s, :]
+    return out

@@ -1,0 +1,89 @@
+"""Jit'd public wrappers over the Pallas kernels with automatic
+backend dispatch.
+
+On TPU the kernels run compiled (Mosaic); on CPU they run via the Pallas
+interpreter when ``use_kernel`` is requested (correctness path), and default
+to the pure-XLA oracle otherwise (performance path for CI).  The dry-run
+lowers the XLA path so ``cost_analysis()`` is well-defined — see DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import covariance as _cov
+from repro.kernels import flash_attention as _fa
+from repro.kernels import procrustes_align as _pa
+from repro.kernels import ref as _ref
+
+__all__ = [
+    "on_tpu",
+    "gram",
+    "batched_gram",
+    "align_average",
+    "attention",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret_default() -> bool:
+    return not on_tpu()
+
+
+def gram(x: jax.Array, *, use_kernel: bool | None = None, **kw) -> jax.Array:
+    """X^T X (f32). Kernel on TPU, interpret-mode kernel if forced on CPU."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if use_kernel:
+        return _cov.gram(x, interpret=_interpret_default(), **kw)
+    return _ref.gram(x)
+
+
+def batched_gram(
+    vs: jax.Array, ref: jax.Array, *, use_kernel: bool | None = None, **kw
+) -> jax.Array:
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if use_kernel:
+        return _pa.batched_gram(vs, ref, interpret=_interpret_default(), **kw)
+    return _ref.batched_gram(vs, ref)
+
+
+def align_average(
+    vs: jax.Array, zs: jax.Array, *, use_kernel: bool | None = None, **kw
+) -> jax.Array:
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if use_kernel:
+        return _pa.align_average(vs, zs, interpret=_interpret_default(), **kw)
+    return _ref.align_average(vs, zs)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    use_kernel: bool | None = None,
+    probs_bf16: bool = False,
+    **kw,
+) -> jax.Array:
+    """GQA attention; flash kernel on TPU, oracle on CPU (unless forced)."""
+    if use_kernel is None:
+        use_kernel = on_tpu() and q.shape[2] > 1  # decode (s=1) stays in XLA
+    if use_kernel:
+        return _fa.flash_attention(
+            q, k, v, causal=causal, window=window,
+            interpret=_interpret_default(), **kw,
+        )
+    return _ref.attention(
+        q, k, v, causal=causal, window=window, probs_bf16=probs_bf16
+    )

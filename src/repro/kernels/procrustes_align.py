@@ -1,0 +1,117 @@
+"""Pallas TPU kernels for the Procrustes-fixing aggregation stages.
+
+Algorithm 1's coordinator work splits into three stages:
+
+  1. Gram stage   G_i = V_i^T @ V_ref           (m tall-skinny matmuls)
+  2. tiny SVDs    Z_i = U_i W_i^T from svd(G_i) (r x r; stays in XLA —
+                  latency-bound, no MXU win; a deliberate non-kernel)
+  3. Apply stage  V_bar = (1/m) sum_i V_i @ Z_i (m rank-r updates)
+
+Stages 1 and 3 stream the (m, d, r) stack of local bases through VMEM once
+each; both are implemented here with explicit BlockSpec tiling.  ``r`` is
+expected MXU-sub-tile (r <= 128): blocks keep the full r extent and tile d.
+
+VMEM budget per step (bk=2048, r=128, f32): 2*bk*r*4 = 2 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["batched_gram", "align_average"]
+
+
+def _batched_gram_kernel(v, ref, out):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out[...] = jnp.zeros_like(out)
+
+    out[...] += jnp.dot(
+        v[0].T.astype(jnp.float32),
+        ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )[None]
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def batched_gram(
+    vs: jax.Array, ref: jax.Array, *, bk: int = 2048, interpret: bool = False
+) -> jax.Array:
+    """G_i = V_i^T @ ref for a stack vs (m, d, r) and reference (d, r).
+
+    Returns (m, r, r) f32.  Grid: (m, d/bk); the d-loop is the sequential
+    (minor) dimension, accumulating each machine's Gram tile in VMEM.
+    """
+    m, d, r = vs.shape
+    bk = min(bk, max(8, d))
+    d_pad = (-d) % bk
+    if d_pad:
+        vs = jnp.pad(vs, ((0, 0), (0, d_pad), (0, 0)))
+        ref = jnp.pad(ref, ((0, d_pad), (0, 0)))
+    dp = vs.shape[1]
+    grid = (m, dp // bk)
+    return pl.pallas_call(
+        _batched_gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bk, r), lambda i, k: (i, k, 0)),
+            pl.BlockSpec((bk, r), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r, r), lambda i, k: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, r, r), jnp.float32),
+        interpret=interpret,
+    )(vs, ref)
+
+
+def _align_average_kernel(v, z, out, *, m: int):
+    i = pl.program_id(1)  # machine index (sequential minor dim)
+
+    @pl.when(i == 0)
+    def _init():
+        out[...] = jnp.zeros_like(out)
+
+    out[...] += jnp.dot(
+        v[0].astype(jnp.float32),
+        z[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(i == m - 1)
+    def _finalize():
+        out[...] = out[...] / m
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def align_average(
+    vs: jax.Array, zs: jax.Array, *, bd: int = 2048, interpret: bool = False
+) -> jax.Array:
+    """(1/m) sum_i V_i @ Z_i for vs (m, d, r), zs (m, r, r) -> (d, r) f32.
+
+    Grid: (d/bd, m); the machine loop is sequential, accumulating into the
+    (bd, r) output tile, with the 1/m scale fused into the last step.
+    """
+    m, d, r = vs.shape
+    bd = min(bd, max(8, d))
+    d_pad = (-d) % bd
+    if d_pad:
+        vs = jnp.pad(vs, ((0, 0), (0, d_pad), (0, 0)))
+    dp = vs.shape[1]
+    grid = (dp // bd, m)
+    out = pl.pallas_call(
+        functools.partial(_align_average_kernel, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd, r), lambda j, i: (i, j, 0)),
+            pl.BlockSpec((1, r, r), lambda j, i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd, r), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((dp, r), jnp.float32),
+        interpret=interpret,
+    )(vs, zs)
+    return out[:d]

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(``tests/test_kernels_*.py`` sweep shapes/dtypes and assert_allclose).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gram", "batched_gram", "align_average", "attention"]
+
+
+def gram(x: jax.Array) -> jax.Array:
+    """X^T X with f32 accumulation. x: (n, d) -> (d, d) f32."""
+    xf = x.astype(jnp.float32)
+    return xf.T @ xf
+
+
+def batched_gram(vs: jax.Array, ref: jax.Array) -> jax.Array:
+    """G_i = V_i^T @ ref. vs: (m, d, r), ref: (d, r) -> (m, r, r) f32."""
+    return jnp.einsum(
+        "mdr,ds->mrs", vs.astype(jnp.float32), ref.astype(jnp.float32)
+    )
+
+
+def align_average(vs: jax.Array, zs: jax.Array) -> jax.Array:
+    """(1/m) sum_i V_i @ Z_i. vs: (m, d, r), zs: (m, r, r) -> (d, r) f32."""
+    m = vs.shape[0]
+    return (
+        jnp.einsum("mdr,mrs->ds", vs.astype(jnp.float32), zs.astype(jnp.float32))
+        / m
+    )
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    logits_soft_cap: float | None = None,
+    probs_bf16: bool = False,
+) -> jax.Array:
+    """Multi-head attention oracle with GQA, causal and sliding-window masks.
+
+    q: (b, hq, s, d); k, v: (b, hkv, t, d); hq % hkv == 0.
+    Returns (b, hq, s, d) in q's dtype; softmax in f32.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    t = k.shape[2]
+    # HEAD-MAJOR GQA: keep the S^2 logits at (b, hq, s, t) so the hq dim
+    # stays TP-shardable.  The grouped (b, kv, g, s, t) form avoids the K/V
+    # repeat but makes the S^2 tensors unshardable whenever neither kv nor
+    # group divides the model axis (16x replication observed on internvl2,
+    # kv=8 g=2 — §Perf post-sweep fix).  The repeat here is a broadcast
+    # reshape (no materialisation until XLA decides, and K is tiny vs S^2).
+    kx = jnp.broadcast_to(
+        k[:, :, None], (b, hkv, group, t, d)
+    ).reshape(b, hq, t, d)
+    vx = jnp.broadcast_to(
+        v[:, :, None], (b, hkv, group, t, d)
+    ).reshape(b, hq, t, d)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    # bf16 operands + f32 MXU accumulation: casting INPUTS to f32 doubles
+    # the HBM/ICI traffic of K (observed: f32 cache all-gathers, §Perf B3).
+    logits = (
+        jnp.einsum("bhsd,bhtd->bhst", q, kx, preferred_element_type=jnp.float32)
+        * scale
+    )
+    if logits_soft_cap is not None:
+        logits = logits_soft_cap * jnp.tanh(logits / logits_soft_cap)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    # Positions are right-aligned when s != t (decode with a prefix cache).
+    q_pos = q_pos + (t - s)
+    mask = jnp.ones((s, t), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    if probs_bf16:
+        # §Perf lever: halve the S^2 probs traffic + MXU-native PV matmul.
+        p = p.astype(jnp.bfloat16)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vx, preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

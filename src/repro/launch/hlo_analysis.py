@@ -1,0 +1,153 @@
+"""Post-compile HLO analysis: collective-bytes breakdown + roofline terms.
+
+``compiled.as_text()`` is the per-device partitioned module; summing each
+collective op's operand bytes gives the per-device bytes placed on the wire
+per step (equivalently: the brief's total-bytes / chips).  The roofline
+collective term is that divided by the per-link ICI bandwidth.
+
+Hardware constants (TPU v5e target, from the brief):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device operand bytes by collective kind, from partitioned HLO.
+
+    We parse each op line of the form
+        %name = <out_shape> all-reduce(<operand shapes ...>), ...
+    and sum the OPERAND shape bytes (what each device contributes to the
+    wire).  ``-start`` async variants are counted; ``-done`` ops are not
+    (they carry the same buffers).
+    """
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.search(r"=\s+\S+\s+([a-z\-]+)\(", ls)
+        if not m:
+            continue
+        op = m.group(1)
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in COLLECTIVE_OPS:
+            continue
+        # operand shapes: inside the call parens
+        paren = ls[ls.index(op) + len(op):]
+        # first (...) group operands; shapes appear as dtype[dims]
+        depth = 0
+        arglist = []
+        for ch in paren:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            if ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                arglist.append(ch)
+        args = "".join(arglist)
+        bytes_ = sum(
+            _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(args)
+        )
+        if bytes_ == 0:
+            # shapes may be elided in operands ("%x.3"); fall back to the
+            # output shape on the lhs.
+            lhs = ls.split("=", 1)[1]
+            m2 = _SHAPE_RE.search(lhs)
+            if m2:
+                bytes_ = _shape_bytes(m2.group(1), m2.group(2))
+        out[base] += bytes_
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float               # per-device HLO flops
+    hbm_bytes: float           # per-device bytes accessed
+    coll_bytes: float          # per-device collective wire bytes
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    coll_breakdown: Dict[str, int]
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(
+    cost: Dict[str, float],
+    hlo_text: str,
+    chips: int,
+) -> RooflineTerms:
+    """Derive the three roofline terms from cost_analysis + partitioned HLO.
+
+    cost_analysis flops/bytes on the partitioned module are per-device
+    already; terms are seconds per step on the target hardware.
+    """
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    coll_total = float(sum(coll.values()))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll_total / ICI_BW
+    terms = {
+        "compute": compute_s,
+        "memory": memory_s,
+        "collective": collective_s,
+    }
+    bottleneck = max(terms, key=terms.get)
+    return RooflineTerms(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=coll_total,
+        chips=chips,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        coll_breakdown=coll,
+    )
+
+
+def model_flops(n_active_params: float, tokens: float, kind: str = "train") -> float:
+    """6·N·D for train (fwd+bwd), 2·N·D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens

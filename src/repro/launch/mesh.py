@@ -1,0 +1,55 @@
+"""Mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module constant) so importing
+this module touches no jax device state — required because the dry-run must
+set XLA_FLAGS before the first device query.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """The target deployment mesh: one v5e pod slice (16 x 16 = 256 chips),
+    or two pods (2 x 16 x 16 = 512 chips) with a leading 'pod' axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_mesh(
+    shape: Tuple[int, ...], axes: Tuple[str, ...]
+) -> jax.sharding.Mesh:
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(
+    *, model: Optional[int] = None, data: Optional[int] = None
+) -> jax.sharding.Mesh:
+    """Best-effort mesh over whatever devices this host actually has
+    (tests / examples): data-major factorisation of the device count."""
+    n = len(jax.devices())
+    if model is None:
+        model = 1
+        for cand in (8, 4, 2):
+            if n % cand == 0 and cand <= n:
+                model = cand
+                break
+        if n == 1:
+            model = 1
+    data = data or (n // model)
+    assert data * model == n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """The axes carrying batch parallelism ('pod' included when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,202 @@
+"""Logical-axis -> mesh sharding rules (MaxText-style, divisibility-checked).
+
+Every parameter carries logical axis names (repro.models.layers.Param); this
+module maps them to PartitionSpecs for a given mesh:
+
+  vocab / heads / kv_heads / mlp / experts -> 'model'   (TP / EP)
+  embed                                    -> 'data'    (FSDP, if cfg.fsdp)
+  layers / head_dim / state dims           -> replicated
+
+Rules are applied greedily left-to-right; a dim shards only if its size is
+divisible by the axis size and the mesh axis is not already used by an
+earlier dim of the same tensor (else it stays replicated — e.g. llama3.2's
+24 heads on a 16-way model axis).  This is the honest baseline; §Perf
+iterates on it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+from repro.models.config import ModelConfig
+
+# logical name -> preferred mesh axis (single-axis entries; 'batch' special)
+DEFAULT_RULES: Dict[str, str] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "embed": "data",  # FSDP; dropped when cfg.fsdp is False
+}
+
+
+def rules_for(cfg: Optional[ModelConfig], mesh) -> Dict[str, Any]:
+    rules = dict(DEFAULT_RULES)
+    if cfg is not None and not cfg.fsdp:
+        rules.pop("embed")
+    if cfg is not None and getattr(cfg, "serve_ep_over_data", False):
+        # Serving layout (§Perf): experts across 'data' (full EP sharding
+        # without FSDP all-gathers), dense TP dims stay on 'model'.
+        rules["experts"] = "data"
+        rules.pop("embed", None)
+    if cfg is not None and getattr(cfg, "serve_mlp_over_data", False):
+        # Serving layout v2 (§Perf B8): EP(model) x expert-ff(data) — the
+        # 1T MoE's expert weights shard over BOTH axes (fits 16 GB HBM)
+        # and stay stationary; the ff contraction psums a tiny buffer.
+        rules["experts"] = "model"
+        rules["mlp"] = "data"
+        rules.pop("embed", None)
+    rules = {k: v for k, v in rules.items() if v in mesh.axis_names}
+    return rules
+
+
+def spec_for_axes(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    mesh,
+    rules: Dict[str, str],
+) -> P:
+    """PartitionSpec for one tensor, greedy with divisibility checks."""
+    entries = []
+    used = set()
+    for dim, name in zip(shape, axes):
+        mesh_axis = rules.get(name) if name else None
+        if (
+            mesh_axis is not None
+            and mesh_axis not in used
+            and dim % mesh.shape[mesh_axis] == 0
+        ):
+            entries.append(mesh_axis)
+            used.add(mesh_axis)
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(values, axes, mesh, cfg: Optional[ModelConfig] = None):
+    """NamedSharding pytree for a (values, logical-axes) pair."""
+    rules = rules_for(cfg, mesh)
+    return jax.tree.map(
+        lambda v, a: NamedSharding(mesh, spec_for_axes(v.shape, a, mesh, rules)),
+        values,
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def batch_spec(mesh, ndim: int = 2, leading_dim: Optional[int] = None) -> P:
+    """Batch tensors shard their leading dim over ('pod','data') when the
+    global batch divides the data-parallel world (long_500k has batch 1 —
+    it stays replicated and relies on model parallelism alone)."""
+    import math
+
+    da = data_axes(mesh)
+    n_data = math.prod(mesh.shape[a] for a in da)
+    if leading_dim is not None and leading_dim % n_data != 0:
+        return P(*(None,) * ndim)
+    return P(da if len(da) > 1 else da[0], *(None,) * (ndim - 1))
+
+
+def batch_shardings(batch_like, mesh):
+    return jax.tree.map(
+        lambda v: NamedSharding(
+            mesh, batch_spec(mesh, len(v.shape), leading_dim=v.shape[0])
+        ),
+        batch_like,
+    )
+
+
+# ------------------------------------------------------------------ cache --
+def cache_logical_axes(cfg: ModelConfig):
+    """Logical axes mirroring lm.init_cache's structure."""
+
+    def block_axes(kind: str):
+        if kind in ("attn", "local_attn"):
+            ax = (None, "batch", "kv_heads", None, None)
+            return {"k": ax, "v": ax}
+        if kind == "rglru":
+            return {
+                "h": (None, "batch", "mlp"),
+                "conv": (None, "batch", None, "mlp"),
+            }
+        if kind == "ssd":
+            return {
+                "s": (None, "batch", "heads", None, None),
+                "conv": (None, "batch", None, "mlp"),
+            }
+        raise ValueError(kind)
+
+    stages = []
+    for pattern, _count in cfg.stages():
+        stages.append({f"block{j}": block_axes(k) for j, k in enumerate(pattern)})
+    return stages
+
+
+def cache_shardings(cache_like, cfg: ModelConfig, mesh):
+    """Shardings for a cache pytree (batch over data axes, heads over model).
+
+    The 'heads'/'kv_heads'/'mlp' dims shard over 'model' when divisible; the
+    batch dim shards over the data axes.
+    """
+    da = data_axes(mesh)
+    batch_axis = da if len(da) > 1 else da[0]
+    rules = {
+        "batch": batch_axis,
+        "kv_heads": "model",
+        "heads": "model",
+        "mlp": "model",
+    }
+
+    def spec(v, a):
+        entries = []
+        used = set()
+        for dim, name in zip(v.shape, a):
+            ax = rules.get(name) if name else None
+            if ax is None:
+                entries.append(None)
+                continue
+            size = (
+                mesh.shape[ax]
+                if isinstance(ax, str)
+                else 1
+            )
+            if isinstance(ax, tuple):
+                import math
+
+                size = math.prod(mesh.shape[x] for x in ax)
+            key = ax if isinstance(ax, str) else "+".join(ax)
+            if key not in used and dim % size == 0:
+                entries.append(ax)
+                used.add(key)
+            else:
+                entries.append(None)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return NamedSharding(mesh, P(*entries))
+
+    if cfg.is_encoder_decoder:
+        # {"self": {k,v}, "cross": {k,v}} stacked over layers
+        ax = (None, "batch", "kv_heads", None, None)
+
+        def enc_spec(v):
+            return spec(v, ax)
+
+        return jax.tree.map(enc_spec, cache_like)
+
+    axes = cache_logical_axes(cfg)
+    return jax.tree.map(
+        lambda v, a: spec(v, a), cache_like, axes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+``input_specs`` mirrors the shannon/kernels pattern: weak-type-correct,
+shardable, zero allocation.  Modality frontends are stubs per the brief —
+whisper gets precomputed frame embeddings, internvl2 precomputed patch
+embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig, ShapeConfig
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {
+        "tokens": _sds((b, s), I32),
+        "labels": _sds((b, s), I32),
+    }
+    if cfg.is_encoder_decoder:
+        # encoder frames (stub conv frontend output) + decoder tokens
+        specs["frames"] = _sds((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.num_patches:
+        specs["patch_embeds"] = _sds(
+            (b, cfg.num_patches, cfg.patch_embed_dim), jnp.dtype(cfg.dtype)
+        )
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    return train_input_specs(cfg, shape) | {}
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(tokens, cache, pos) stand-ins for serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    tokens = _sds((b, 1), I32)
+    pos = _sds((), I32)
+    if cfg.is_encoder_decoder:
+        kv = (cfg.num_layers, b, cfg.num_kv_heads, s, cfg.head_dim)
+        cache = {
+            "self": {"k": _sds(kv, jnp.dtype(cfg.dtype)), "v": _sds(kv, jnp.dtype(cfg.dtype))},
+            "cross": {"k": _sds(kv, jnp.dtype(cfg.dtype)), "v": _sds(kv, jnp.dtype(cfg.dtype))},
+        }
+        return tokens, cache, pos
+    cache = jax.eval_shape(
+        lambda: lm.init_cache(cfg, b, s, dtype=jnp.dtype(cfg.dtype))
+    )
+    return tokens, cache, pos

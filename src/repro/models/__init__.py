@@ -1,0 +1,9 @@
+from repro.models.config import (  # noqa: F401
+    ModelConfig,
+    SHAPES,
+    ShapeConfig,
+    active_param_count,
+    param_count,
+    supports_shape,
+)
+from repro.models.registry import abstract_params, build, init_split  # noqa: F401

@@ -1,0 +1,210 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the brief the audio frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (B, S_enc, d_model) — i.e. the output of
+whisper's conv1d stack — and the encoder runs bidirectional attention over
+them.  The decoder is a causal LM with cross-attention.  Positions use
+sinusoidal embeddings (whisper's learned absolute tables are replaced so
+arbitrary assigned shapes lower cleanly; recorded in DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": L._zeros((cfg.d_model,), ("embed",)),
+        "attn": L.init_attention(ks[0], cfg),
+        "norm2": L._zeros((cfg.d_model,), ("embed",)),
+        "mlp": L.init_mlp(ks[1], cfg),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": L._zeros((cfg.d_model,), ("embed",)),
+        "self_attn": L.init_attention(ks[0], cfg),
+        "norm_x": L._zeros((cfg.d_model,), ("embed",)),
+        "cross_attn": L.init_cross_attention(ks[1], cfg),
+        "norm2": L._zeros((cfg.d_model,), ("embed",)),
+        "mlp": L.init_mlp(ks[2], cfg),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig):
+    from repro.models.lm import _stack_layers
+
+    ks = jax.random.split(key, cfg.num_encoder_layers + cfg.num_layers + 3)
+    i = iter(ks)
+    enc = _stack_layers(
+        [_init_enc_layer(next(i), cfg) for _ in range(cfg.num_encoder_layers)]
+    )
+    dec = _stack_layers([_init_dec_layer(next(i), cfg) for _ in range(cfg.num_layers)])
+    return {
+        "embed": L._dense_init(
+            next(i), (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), in_axis=1
+        ),
+        "unembed": L._dense_init(
+            next(i), (cfg.d_model, cfg.padded_vocab), ("embed", "vocab")
+        ),
+        "enc_norm": L._zeros((cfg.d_model,), ("embed",)),
+        "dec_norm": L._zeros((cfg.d_model,), ("embed",)),
+        "encoder": enc,
+        "decoder": dec,
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, d_model) stub frontend output -> encoder states."""
+    cdt = jnp.dtype(cfg.dtype)
+    s = frames.shape[1]
+    x = frames.astype(cdt) + _sinusoid(jnp.arange(s), cfg.d_model).astype(cdt)
+    positions = jnp.arange(s)
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+        out, _ = L.apply_attention(
+            lp["attn"], cfg, h, positions=positions, causal=False, mode="train"
+        )
+        x = x + out
+        h = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+        return x + L.apply_mlp(lp["mlp"], cfg, h), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+    else:
+        for i in range(cfg.num_encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda t: t[i], params["encoder"]))
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    enc_out: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    mode: str = "train",
+    cache=None,
+):
+    """Decoder forward. Returns (logits, new_cache).
+
+    Cache pytree: {"self": {k,v}, "cross": {k,v}} stacked over layers.
+    """
+    cdt = jnp.dtype(cfg.dtype)
+    s = tokens.shape[1]
+    if positions is None:
+        positions = jnp.arange(s)
+    x = jnp.take(params["embed"].astype(cdt), tokens, axis=0)
+    x = x + _sinusoid(jnp.atleast_1d(positions), cfg.d_model).astype(cdt)
+
+    def body(carry, xs):
+        xx = carry
+        lp, lc = xs
+        h = L.rms_norm(xx, lp["norm1"], cfg.norm_eps)
+        out, new_self = L.apply_attention(
+            lp["self_attn"],
+            cfg,
+            h,
+            positions=positions,
+            cache=lc["self"] if lc is not None else None,
+            mode=mode,
+        )
+        xx = xx + out
+        h = L.rms_norm(xx, lp["norm_x"], cfg.norm_eps)
+        out, new_cross = L.apply_cross_attention(
+            lp["cross_attn"],
+            cfg,
+            h,
+            enc_out=enc_out,
+            cache=lc["cross"] if lc is not None else None,
+        )
+        xx = xx + out
+        h = L.rms_norm(xx, lp["norm2"], cfg.norm_eps)
+        xx = xx + L.apply_mlp(lp["mlp"], cfg, h)
+        ys = 0.0
+        if mode in ("prefill", "decode"):
+            ys = {"self": new_self, "cross": new_cross}
+        return xx, ys
+
+    fn = body
+    if cfg.remat == "full" and mode == "train":
+        fn = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, ys = jax.lax.scan(fn, x, (params["decoder"], cache))
+    else:
+        ys_list = []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda t: t[i], params["decoder"])
+            lc = jax.tree.map(lambda t: t[i], cache) if cache is not None else None
+            x, y = fn(x, (lp, lc))
+            ys_list.append(y)
+        if isinstance(ys_list[0], dict):
+            ys = jax.tree.map(lambda *xs: jnp.stack(xs), *ys_list)
+        else:
+            ys = jnp.stack(ys_list)
+    x = L.rms_norm(x, params["dec_norm"], cfg.norm_eps)
+    if mode == "prefill":
+        x = x[:, -1:, :]  # §Perf: last-position logits only (see lm.forward)
+    logits = jnp.einsum(
+        "bsm,mv->bsv", x, params["unembed"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    if cfg.padded_vocab != cfg.vocab_size:
+        neg = jnp.full((cfg.padded_vocab - cfg.vocab_size,), -1e30, jnp.float32)
+        logits = logits.at[..., cfg.vocab_size :].set(neg)
+    new_cache = ys if mode in ("prefill", "decode") else None
+    return logits, new_cache
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """Teacher-forced CE. batch: frames (B,S_enc,M), tokens, labels (B,S_dec)."""
+    enc_out = encode(params, cfg, batch["frames"])
+    logits, _ = decode(params, cfg, batch["tokens"], enc_out=enc_out, mode="train")
+    ce = L.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+def prefill(params, cfg: ModelConfig, frames, tokens, *, cache_len=None):
+    """Encode + prime the decoder cache. Returns (last_logits, cache)."""
+    cache_len = cache_len or tokens.shape[1]
+    enc_out = encode(params, cfg, frames)
+    logits, cache = decode(params, cfg, tokens, enc_out=enc_out, mode="prefill")
+
+    def grow(path_is_self, x):
+        if x.ndim == 5 and x.shape[3] < cache_len:
+            return jnp.pad(x, ((0, 0),) * 3 + ((0, cache_len - x.shape[3]), (0, 0)))
+        return x
+
+    cache = {
+        "self": jax.tree.map(lambda x: grow(True, x), cache["self"]),
+        "cross": cache["cross"],
+    }
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
+    logits, new_cache = decode(
+        params, cfg, tokens, positions=jnp.asarray(pos), mode="decode", cache=cache
+    )
+    return logits[:, 0], new_cache

@@ -1,0 +1,713 @@
+"""Model-layer primitives: norms, RoPE, GQA attention (full / local / cross),
+SwiGLU & MoE MLPs, RG-LRU recurrence, Mamba2 SSD — all with train / prefill /
+decode paths and explicit logical sharding axes.
+
+Parameter convention: init functions return pytrees whose leaves are
+``Param(value, axes)``; ``split_params`` separates values from the logical
+axis names that ``repro.launch.sharding`` maps onto the mesh.
+
+Caches: each mixer owns its cache pytree —
+  attention:  {"k","v"}   (B, kv_heads, S_cache, head_dim)  absolute slots
+  local attn: ring-buffer of ``window`` slots (slot = pos % window); RoPE is
+              applied at write time with absolute positions, so attention is
+              order-agnostic afterwards.
+  rg-lru:     {"h"} (B, W) recurrent state + {"conv"} conv tail
+  ssd:        {"s"} (B, H, P, N) state + {"conv"} conv tail
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.config import ModelConfig
+from repro.models.sharding_ctx import (constrain_batch,
+    constrain_batch_heads, constrain_expert_dim)
+
+
+@jax.tree_util.register_pytree_node_class
+class Param:
+    """A weight plus its logical sharding axes.
+
+    ``axes`` is static pytree aux-data (not a leaf), so Param trees survive
+    ``jax.eval_shape`` — the dry-run derives abstract parameter shapes AND
+    sharding axes without allocating anything.
+    """
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: Tuple[Optional[str], ...]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    def __repr__(self):
+        return f"Param({getattr(self.value, 'shape', self.value)!r}, axes={self.axes})"
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """Split a Param tree into (values, axes) pytrees of the same structure."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def _dense_init(key, shape, axes, in_axis=0, dtype=jnp.float32) -> Param:
+    """Fan-in scaled truncated-normal init."""
+    import math
+
+    fan_in = (
+        shape[in_axis]
+        if isinstance(in_axis, int)
+        else math.prod(shape[a] for a in in_axis)
+    )
+    std = (1.0 / max(fan_in, 1)) ** 0.5
+    w = std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+    return Param(w, axes)
+
+
+def _zeros(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+def _ones(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+# ------------------------------------------------------------------ norms --
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- RoPE --
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float, fraction: float = 1.0
+) -> jax.Array:
+    """Rotary embedding on the leading ``fraction`` of the head dim.
+
+    x: (..., S, H, D) with positions (..., S) broadcastable.
+    ``fraction=0.5`` is the chatglm-style 2d-RoPE analogue (half the dim
+    rotary, half pass-through).
+    """
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None, None].astype(jnp.float32) * freq  # (..., S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rot < d else out
+
+
+# -------------------------------------------------------------- attention --
+def init_attention(key, cfg: ModelConfig) -> Dict[str, Param]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], (d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": _dense_init(ks[1], (d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": _dense_init(ks[2], (d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": _dense_init(
+            ks[3], (h, hd, d), ("heads", "head_dim", "embed"), in_axis=(0, 1)
+        ),
+    }
+
+
+def _attn_cache_spec(cfg: ModelConfig, batch: int, cache_len: int, window: bool):
+    s = min(cache_len, cfg.window_size) if window else cache_len
+    shp = (batch, cfg.num_kv_heads, s, cfg.head_dim)
+    return {"k": shp, "v": shp}
+
+
+def apply_attention(
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    window: Optional[int] = None,
+    causal: bool = True,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    mode: str = "train",
+    use_flash: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """GQA attention. x: (B, S, M); positions: (S,) or (B, S) or scalar pos.
+
+    train:   full causal (or windowed) attention, no cache.
+    prefill: same + returns the filled cache (ring-buffer for local attn).
+    decode:  S == 1; reads + updates the cache at ``positions`` (scalar).
+    """
+    cdt = x.dtype
+    b, s, _ = x.shape
+    q = jnp.einsum("bsm,mhd->bshd", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsm,mkd->bskd", x, p["wk"].astype(cdt))
+    v = jnp.einsum("bsm,mkd->bskd", x, p["wv"].astype(cdt))
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    qt = q.transpose(0, 2, 1, 3)  # (B, H, S, D)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    if mode == "decode":
+        assert cache is not None and s == 1
+        pos = positions if positions.ndim == 0 else positions.reshape(())
+        s_cache = cache["k"].shape[2]
+        if window is not None:
+            slot = pos % window
+        else:
+            slot = pos
+        ck = constrain_batch(
+            jax.lax.dynamic_update_slice(
+                cache["k"], kt.astype(cache["k"].dtype), (0, 0, slot, 0)
+            )
+        )
+        cv = constrain_batch(
+            jax.lax.dynamic_update_slice(
+                cache["v"], vt.astype(cache["v"].dtype), (0, 0, slot, 0)
+            )
+        )
+        # Validity of each cache slot at this step.
+        idx = jnp.arange(s_cache)
+        if window is not None:
+            # slot j holds absolute position p_j = the latest p <= pos with
+            # p % window == j; valid iff p_j >= 0 and p_j > pos - window.
+            p_j = pos - ((pos - idx) % window)
+            valid = (p_j >= 0) & (p_j > pos - window)
+        else:
+            valid = idx <= pos
+        group = cfg.num_heads // cfg.num_kv_heads
+        # Grouped GQA against the cache: never materialise repeated K/V.
+        qg = qt.reshape(b, cfg.num_kv_heads, group, 1, cfg.head_dim)
+        scale = 1.0 / (cfg.head_dim**0.5)
+        # bf16 cache reads + f32 accumulation (see ref.attention note).
+        logits = (
+            jnp.einsum(
+                "bkgsd,bktd->bkgst", qg, ck, preferred_element_type=jnp.float32
+            )
+            * scale
+        )
+        logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        if cfg.attn_probs_bf16:
+            # cache-dtype probs: a f32 x bf16 einsum upcasts (and re-gathers)
+            # the whole KV cache in f32 (§Perf B5).  Follows the same config
+            # flag as the train path so train/serve logits stay consistent.
+            probs = probs.astype(cv.dtype)
+        out = jnp.einsum(
+            "bkgst,bktd->bkgsd", probs, cv, preferred_element_type=jnp.float32
+        ).reshape(b, cfg.num_heads, 1, cfg.head_dim).astype(cdt)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        qt = constrain_batch_heads(qt)
+        kt = constrain_batch_heads(kt)
+        vt = constrain_batch_heads(vt)
+        out = constrain_batch_heads(
+            kops.attention(
+                qt, kt, vt, causal=causal, window=window,
+                use_kernel=use_flash or None, probs_bf16=cfg.attn_probs_bf16,
+            )
+        )
+        new_cache = None
+        if mode == "prefill":
+            if window is not None:
+                w = min(window, kt.shape[2])
+                # Keep the last ``window`` keys; ring-buffer slot = pos % window.
+                tail_k = kt[:, :, -w:, :]
+                tail_v = vt[:, :, -w:, :]
+                tail_pos = positions[..., -w:] if positions.ndim else None
+                slots = (positions[-w:] % window).astype(jnp.int32)
+                ck = jnp.zeros(
+                    (b, cfg.num_kv_heads, window, cfg.head_dim), cdt
+                ).at[:, :, slots, :].set(tail_k)
+                cv = jnp.zeros_like(ck).at[:, :, slots, :].set(tail_v)
+                del tail_pos
+                new_cache = {"k": ck, "v": cv}
+            else:
+                new_cache = {"k": kt, "v": vt}
+
+    y = out.transpose(0, 2, 1, 3)  # (B, S, H, D)
+    o = jnp.einsum("bshd,hdm->bsm", y, p["wo"].astype(cdt))
+    return o, new_cache
+
+
+# --------------------------------------------------------- cross-attention --
+def init_cross_attention(key, cfg: ModelConfig) -> Dict[str, Param]:
+    return init_attention(key, cfg)
+
+
+def apply_cross_attention(
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    enc_out: Optional[jax.Array] = None,
+    cache: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Cross attention: queries from x (B,S,M), keys/values from the encoder.
+
+    If ``cache`` is given, the projected encoder K/V are reused (decode);
+    otherwise they are computed from ``enc_out`` and returned as the cache.
+    """
+    cdt = x.dtype
+    q = jnp.einsum("bsm,mhd->bshd", x, p["wq"].astype(cdt)).transpose(0, 2, 1, 3)
+    if cache is None:
+        k = jnp.einsum("btm,mkd->btkd", enc_out, p["wk"].astype(cdt))
+        v = jnp.einsum("btm,mkd->btkd", enc_out, p["wv"].astype(cdt))
+        cache = {"k": k.transpose(0, 2, 1, 3), "v": v.transpose(0, 2, 1, 3)}
+    out = kops.attention(q, cache["k"], cache["v"], causal=False, use_kernel=False)
+    y = out.transpose(0, 2, 1, 3)
+    o = jnp.einsum("bshd,hdm->bsm", y, p["wo"].astype(cdt))
+    return o, cache
+
+
+# -------------------------------------------------------------------- MLP --
+def init_mlp(key, cfg: ModelConfig) -> Dict[str, Param]:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": _dense_init(ks[0], (d, f), ("embed", "mlp")),
+        "wo": _dense_init(ks[1], (f, d), ("mlp", "embed")),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = _dense_init(ks[2], (d, f), ("embed", "mlp"))
+    return p
+
+
+def apply_mlp(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    cdt = x.dtype
+    h = jnp.einsum("bsm,mf->bsf", x, p["wi"].astype(cdt))
+    if cfg.gated_mlp:
+        g = jnp.einsum("bsm,mf->bsf", x, p["wg"].astype(cdt))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fm->bsm", h, p["wo"].astype(cdt))
+
+
+# -------------------------------------------------------------------- MoE --
+def init_moe(key, cfg: ModelConfig) -> Dict[str, Param]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(ks[0], (d, e), ("embed", None)),
+        "wi": _dense_init(ks[1], (e, d, f), ("experts", "embed", "mlp"), in_axis=1),
+        "wg": _dense_init(ks[2], (e, d, f), ("experts", "embed", "mlp"), in_axis=1),
+        "wo": _dense_init(ks[3], (e, f, d), ("experts", "mlp", "embed"), in_axis=1),
+    }
+
+
+def moe_capacity(cfg: ModelConfig, seq: int) -> int:
+    c = int(cfg.capacity_factor * seq * cfg.num_experts_per_token / cfg.num_experts)
+    return max(4, (c + 3) // 4 * 4)
+
+
+def apply_moe(
+    p, cfg: ModelConfig, x: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    if cfg.moe_impl == "sort":
+        return apply_moe_sort(p, cfg, x)
+    return apply_moe_einsum(p, cfg, x)
+
+
+def apply_moe_einsum(
+    p, cfg: ModelConfig, x: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Switch/GShard-style top-k routing with capacity + dispatch/combine
+    einsums (EP-shardable over the 'experts' axis).  Returns (out, aux_loss).
+    """
+    cdt = x.dtype
+    b, s, m = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_token
+    cap = moe_capacity(cfg, s)
+
+    logits = jnp.einsum(
+        "bsm,me->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # (B,S,E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Load-balancing auxiliary loss (Switch): e * sum_e f_e * p_e.
+    onehot_top1 = jax.nn.one_hot(expert_idx[..., 0], e)
+    f_e = jnp.mean(onehot_top1, axis=(0, 1))
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(f_e * p_e)
+
+    # Position of each (token, k) within its expert queue, sequence-ordered.
+    oh = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)  # (B,S,K,E)
+    flat = oh.reshape(b, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1  # (B, S*K, E)
+    pos = pos.reshape(b, s, k, e)
+    pos_tok = jnp.sum(pos * oh, axis=-1)  # (B,S,K)
+    keep = pos_tok < cap
+
+    # dispatch (B,S,E,C) / combine weights.
+    oh_cap = jax.nn.one_hot(pos_tok, cap) * keep[..., None]  # (B,S,K,C)
+    dispatch = constrain_expert_dim(
+        jnp.einsum("bske,bskc->bsec", oh.astype(jnp.float32), oh_cap), dim=2
+    )
+    combine = constrain_expert_dim(
+        jnp.einsum(
+            "bske,bskc,bsk->bsec", oh.astype(jnp.float32), oh_cap, gate_vals
+        ),
+        dim=2,
+    )
+
+    # EP: keep the expert dim model-sharded end to end — without these
+    # constraints GSPMD gathers the expert weights instead (§Perf B4).
+    xin = constrain_expert_dim(
+        jnp.einsum("bsec,bsm->becm", dispatch.astype(cdt), x), dim=1
+    )
+    h = constrain_expert_dim(
+        jnp.einsum("becm,emf->becf", xin, p["wi"].astype(cdt)), dim=1
+    )
+    g = constrain_expert_dim(
+        jnp.einsum("becm,emf->becf", xin, p["wg"].astype(cdt)), dim=1
+    )
+    h = jax.nn.silu(g) * h
+    out_e = constrain_expert_dim(
+        jnp.einsum("becf,efm->becm", h, p["wo"].astype(cdt)), dim=1
+    )
+    out = jnp.einsum("bsec,becm->bsm", combine.astype(cdt), out_e)
+    return out, aux
+
+
+def apply_moe_sort(
+    p, cfg: ModelConfig, x: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Sort-based MoE dispatch (§Perf lever): argsort token-expert pairs by
+    expert, compute in-expert positions from sorted run lengths, and move
+    activations with gather/scatter instead of one-hot einsums.
+
+    Dispatch state is O(N*K) integers + ONE (E, cap, M) expert buffer for
+    the whole (B*S) token group — the (B,S,E,C) one-hot dispatch/combine
+    tensors AND the per-row buffer replication of the einsum baseline
+    disappear.  Global-group capacity (cap ~ cf*B*S*K/E) keeps the expert
+    buffer ~cf x the active slots — decisive for decode, where per-row
+    capacity forces a 48x-overprovisioned buffer (§Perf B7).
+    """
+    cdt = x.dtype
+    b, s, m = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_token
+    n_tok = b * s
+    cap = max(4, int(cfg.capacity_factor * n_tok * k / e + 3) // 4 * 4)
+
+    logits = jnp.einsum(
+        "bsm,me->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+    onehot_top1 = jax.nn.one_hot(expert_idx[..., 0], e)
+    aux = e * jnp.sum(
+        jnp.mean(onehot_top1, axis=(0, 1)) * jnp.mean(probs, axis=(0, 1))
+    )
+
+    # one global token group (B*S tokens)
+    xr = x.reshape(n_tok, m)
+    flat_e = expert_idx.reshape(-1)  # (N*K,)
+    # stable sort keeps token order within an expert -> token-priority
+    # capacity dropping (sequence-priority within each row, rows in order).
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts  # (E,)
+    pos = jnp.arange(n_tok * k) - starts[sorted_e]
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_e * cap + pos, e * cap)  # drop -> dummy
+    tok = order // k
+    buf = jnp.zeros((e * cap + 1, m), cdt)
+    buf = buf.at[slot].set(xr[tok])
+    buf = constrain_expert_dim(buf[: e * cap].reshape(e, cap, m), dim=0)
+    h = constrain_expert_dim(
+        jnp.einsum("ecm,emf->ecf", buf, p["wi"].astype(cdt)), dim=0
+    )
+    g = constrain_expert_dim(
+        jnp.einsum("ecm,emf->ecf", buf, p["wg"].astype(cdt)), dim=0
+    )
+    out_e = constrain_expert_dim(
+        jnp.einsum("ecf,efm->ecm", jax.nn.silu(g) * h, p["wo"].astype(cdt)),
+        dim=0,
+    ).reshape(e * cap, m)
+    pair_out = jnp.where(keep[:, None], out_e[jnp.clip(slot, 0, e * cap - 1)], 0.0)
+    w = gate_vals.reshape(-1)[order][:, None].astype(cdt)
+    y = jnp.zeros((n_tok, m), cdt).at[tok].add(pair_out * w)
+    return y.reshape(b, s, m), aux
+
+
+# ------------------------------------------------------------------ RG-LRU --
+def init_rglru(key, cfg: ModelConfig) -> Dict[str, Param]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": _dense_init(ks[0], (d, w), ("embed", "mlp")),
+        "wgate": _dense_init(ks[1], (d, w), ("embed", "mlp")),
+        "conv": _dense_init(ks[2], (cfg.conv_width, w), (None, "mlp"), in_axis=0),
+        "wa": _dense_init(ks[3], (w, w), ("mlp", None)),
+        "wi": _dense_init(ks[4], (w, w), ("mlp", None)),
+        "wo": _dense_init(ks[5], (w, d), ("mlp", "embed")),
+        # a = sigmoid(lam) ~ 0.9..0.999 -> lam in [2.2, 6.9]
+        "lam": Param(
+            jnp.linspace(2.2, 6.9, w, dtype=jnp.float32), ("mlp",)
+        ),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, tail: Optional[jax.Array]):
+    """Depthwise causal conv along time. x: (B,S,W); w: (K,W).
+
+    Returns (y, new_tail) where tail carries the last K-1 inputs for decode.
+    """
+    kw = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, W)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+        for i in range(kw)
+    )
+    new_tail = xp[:, -(kw - 1) :, :]
+    return y, new_tail
+
+
+def apply_rglru(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    mode: str = "train",
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """RG-LRU mixer (RecurrentGemma): gated linear recurrence
+        h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t),
+        a_t = a^(c * r_t),  a = sigmoid(lam),  c = 8.
+    Train/prefill use an associative scan over time; decode is one step.
+    """
+    cdt = x.dtype
+    c_const = 8.0
+    u = jnp.einsum("bsm,mw->bsw", x, p["wx"].astype(cdt))
+    gate = jnp.einsum("bsm,mw->bsw", x, p["wgate"].astype(cdt))
+    tail = cache.get("conv") if cache else None
+    u, new_tail = _causal_conv(u, p["conv"], tail)
+
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u.astype(jnp.float32), p["wa"].astype(jnp.float32))
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u.astype(jnp.float32), p["wi"].astype(jnp.float32))
+    )
+    log_a = -c_const * jax.nn.softplus(-p["lam"]).astype(jnp.float32)  # log sigmoid
+    a = jnp.exp(log_a[None, None, :] * r)  # (B,S,W) in (0,1)
+    b_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * u.astype(jnp.float32))
+
+    h0 = cache.get("h") if cache else None
+    if mode == "decode":
+        h_prev = h0 if h0 is not None else jnp.zeros_like(b_in[:, 0])
+        h = a[:, 0] * h_prev + b_in[:, 0]
+        hs = h[:, None, :]
+        new_h = h
+    else:
+        if h0 is not None:
+            b_in = b_in.at[:, 0].add(a[:, 0] * h0)
+
+        def comb(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(comb, (a, b_in), axis=1)
+        new_h = hs[:, -1]
+
+    y = (hs.astype(cdt)) * jax.nn.gelu(gate)
+    out = jnp.einsum("bsw,wm->bsm", y, p["wo"].astype(cdt))
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"h": new_h, "conv": new_tail.astype(jnp.float32)}
+    return out, new_cache
+
+
+# --------------------------------------------------------------- Mamba2 SSD --
+def init_ssd(key, cfg: ModelConfig) -> Dict[str, Param]:
+    d, di, nh, ns = cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wx": _dense_init(ks[0], (d, di), ("embed", "mlp")),
+        "wz": _dense_init(ks[1], (d, di), ("embed", "mlp")),
+        "wb": _dense_init(ks[2], (d, ns), ("embed", None)),
+        "wc": _dense_init(ks[3], (d, ns), ("embed", None)),
+        "wdt": _dense_init(ks[4], (d, nh), ("embed", None)),
+        "conv": _dense_init(ks[5], (cfg.conv_width, di), (None, "mlp"), in_axis=0),
+        "wo": _dense_init(ks[6], (di, d), ("mlp", "embed")),
+        "a_log": Param(jnp.log(jnp.linspace(1.0, 16.0, nh)), (None,)),
+        "dt_bias": _zeros((nh,), (None,)),
+        "dskip": _ones((nh,), (None,)),
+    }
+
+
+def _ssd_scan_chunked(a, u, bmat, cmat, s0, chunk):
+    """Chunked SSD (state-space duality) forward.
+
+    a: (B,S,H) per-step decay in (0,1);  u: (B,S,H,P) inputs (dt*x);
+    bmat/cmat: (B,S,N) shared across heads (G=1);  s0: (B,H,P,N) or None.
+    Returns (y (B,S,H,P), s_last (B,H,P,N)).
+    """
+    b, s, h = a.shape
+    p = u.shape[-1]
+    n = bmat.shape[-1]
+    q = chunk
+    nc = s // q
+    ar = a.reshape(b, nc, q, h)
+    ur = u.reshape(b, nc, q, h, p)
+    br = bmat.reshape(b, nc, q, n)
+    cr = cmat.reshape(b, nc, q, n)
+
+    log_a = jnp.log(jnp.maximum(ar, 1e-20))
+    cum = jnp.cumsum(log_a, axis=2)  # (B,NC,Q,H) log prod_{<=t}
+    total = cum[:, :, -1, :]  # (B,NC,H)
+
+    # Intra-chunk (lower-triangular "attention"):
+    #   G[t,tau] = C_t.B_tau * exp(cum_t - cum_tau)  for tau <= t  (strict
+    #   decay from tau+1..t times a_tau is folded into u via dt*x and a_tau
+    #   convention: decay(tau->t) = prod_{tau+1..t} a = exp(cum_t - cum_tau)).
+    scores = jnp.einsum("bcqn,bckn->bcqk", cr, br)  # (B,NC,Q,Q)
+    tri = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # Mask the exponent BEFORE exp: the upper triangle has positive exponents
+    # that overflow, and grad-of-where(inf) poisons the backward pass.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,NC,Q,K,H)
+    decay = jnp.exp(jnp.where(tri, diff, -1e30))
+    w = jnp.where(tri, scores[..., None] * decay, 0.0)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", w, ur)
+
+    # Chunk-local final states: S_c = sum_tau exp(total - cum_tau) B_tau u_tau^T
+    state_w = jnp.exp(total[:, :, None, :] - cum)  # (B,NC,Q,H)
+    s_local = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", state_w, ur, br)
+
+    # Scan chunk states: S_c_in = exp(total_c) * S_{c-1}_in + s_local_{c-1}...
+    def step(carry, inp):
+        s_loc, tot = inp  # (B,H,P,N), (B,H)
+        s_in = carry
+        s_out = jnp.exp(tot)[:, :, None, None] * s_in + s_loc
+        return s_out, s_in
+
+    if s0 is None:
+        s0 = jnp.zeros_like(s_local[:, 0])
+    s_last, s_in_per_chunk = jax.lax.scan(
+        step,
+        s0,
+        (s_local.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    s_in = s_in_per_chunk.transpose(1, 0, 2, 3, 4)  # (B,NC,H,P,N) entering state
+
+    # Inter-chunk contribution: y_inter[t] = exp(cum_t) * C_t . S_in
+    y_inter = jnp.einsum(
+        "bcqh,bcqn,bchpn->bcqhp", jnp.exp(cum), cr, s_in
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, s_last
+
+
+def apply_ssd(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    mode: str = "train",
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Mamba2 SSD mixer. x: (B,S,M)."""
+    cdt = x.dtype
+    b, s, _ = x.shape
+    nh, hp, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state_dim
+    xin = jnp.einsum("bsm,md->bsd", x, p["wx"].astype(cdt))
+    z = jnp.einsum("bsm,md->bsd", x, p["wz"].astype(cdt))
+    tail = cache.get("conv") if cache else None
+    xin, new_tail = _causal_conv(xin, p["conv"], tail)
+    xin = jax.nn.silu(xin)
+
+    bmat = jnp.einsum("bsm,mn->bsn", x.astype(jnp.float32), p["wb"].astype(jnp.float32))
+    cmat = jnp.einsum("bsm,mn->bsn", x.astype(jnp.float32), p["wc"].astype(jnp.float32))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsm,mh->bsh", x.astype(jnp.float32), p["wdt"].astype(jnp.float32))
+        + p["dt_bias"][None, None]
+    )  # (B,S,H)
+    a = jnp.exp(-dt * jnp.exp(p["a_log"])[None, None])  # (B,S,H) in (0,1)
+    xh = xin.astype(jnp.float32).reshape(b, s, nh, hp)
+    u = dt[..., None] * xh  # (B,S,H,P)
+
+    s0 = cache.get("s") if cache else None
+    if mode == "decode":
+        s_prev = s0 if s0 is not None else jnp.zeros((b, nh, hp, ns), jnp.float32)
+        s_new = a[:, 0, :, None, None] * s_prev + jnp.einsum(
+            "bhp,bn->bhpn", u[:, 0], bmat[:, 0]
+        )
+        y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], s_new)[:, None]  # (B,1,H,P)
+        s_last = s_new
+    else:
+        q = min(cfg.ssm_chunk, s)
+        pad = (-s) % q
+        if pad:
+            a_p = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+            u_p = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            b_p = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        else:
+            a_p, u_p, b_p, c_p = a, u, bmat, cmat
+        y, s_last = _ssd_scan_chunked(a_p, u_p, b_p, c_p, s0, q)
+        y = y[:, :s]
+
+    y = y + p["dskip"][None, None, :, None] * xh[:, :s] if mode != "decode" else (
+        y + p["dskip"][None, None, :, None] * xh[:, :1]
+    )
+    y = y.reshape(b, -1, nh * hp).astype(cdt) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,dm->bsm", y, p["wo"].astype(cdt))
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"s": s_last, "conv": new_tail.astype(jnp.float32)}
+    return out, new_cache
+
+
+# ------------------------------------------------------------ loss helpers --
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None
+) -> jax.Array:
+    """Mean token CE in f32. logits: (B,S,V); labels: (B,S) int32."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,345 @@
+"""Decoder-only LM covering dense / MoE / hybrid / SSM / VLM families.
+
+The layer stack is organised as scan *stages* (see ModelConfig.stages):
+parameters of each stage are stacked over its repeat count and the forward
+pass is a ``jax.lax.scan`` over the stack — one traced layer body per stage
+keeps the HLO small enough to compile 61-layer / 512-device dry-runs.
+
+Modes:
+  train   — full causal forward, returns logits (+ MoE aux loss)
+  prefill — returns logits and the per-layer cache pytree
+  decode  — single-token step with donated cache (serve_step)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.sharding_ctx import constrain_batch
+
+
+# ------------------------------------------------------------------- init --
+def _init_block(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": L._zeros((cfg.d_model,), ("embed",))}
+    if kind in ("attn", "local_attn"):
+        p["mixer"] = L.init_attention(ks[0], cfg)
+    elif kind == "rglru":
+        p["mixer"] = L.init_rglru(ks[0], cfg)
+    elif kind == "ssd":
+        p["mixer"] = L.init_ssd(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.d_ff > 0:
+        p["norm2"] = L._zeros((cfg.d_model,), ("embed",))
+        p["mlp"] = L.init_moe(ks[1], cfg) if cfg.is_moe else L.init_mlp(ks[1], cfg)
+    return p
+
+
+def _init_layer(key, cfg: ModelConfig, pattern: Tuple[str, ...]):
+    ks = jax.random.split(key, len(pattern))
+    return {f"block{j}": _init_block(ks[j], cfg, kind) for j, kind in enumerate(pattern)}
+
+
+def _stack_layers(trees):
+    """Stack a list of identical Param trees along a new leading 'layers' dim."""
+    return jax.tree.map(
+        lambda *ps: L.Param(
+            jnp.stack([p.value for p in ps]), ("layers",) + ps[0].axes
+        ),
+        *trees,
+        is_leaf=L.is_param,
+    )
+
+
+def init_lm(key, cfg: ModelConfig):
+    cfg.validate()
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    params: Dict[str, Any] = {
+        "embed": L._dense_init(
+            keys[0], (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), in_axis=1
+        ),
+        "final_norm": L._zeros((cfg.d_model,), ("embed",)),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L._dense_init(
+            keys[1], (cfg.d_model, cfg.padded_vocab), ("embed", "vocab")
+        )
+    if cfg.num_patches:
+        params["patch_proj"] = L._dense_init(
+            keys[2], (cfg.patch_embed_dim, cfg.d_model), (None, "embed")
+        )
+    stages = []
+    lk = iter(keys[4:])
+    for pattern, count in cfg.stages():
+        stages.append(
+            _stack_layers([_init_layer(next(lk), cfg, pattern) for _ in range(count)])
+        )
+    params["stages"] = stages
+    return params
+
+
+# ------------------------------------------------------------------ cache --
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    """Zero cache pytree mirroring the stage structure."""
+
+    def block_cache(kind: str):
+        if kind == "attn":
+            shp = (batch, cfg.num_kv_heads, cache_len, cfg.head_dim)
+            return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+        if kind == "local_attn":
+            w = min(cfg.window_size, cache_len)
+            shp = (batch, cfg.num_kv_heads, w, cfg.head_dim)
+            return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+        if kind == "rglru":
+            w = cfg.lru_width or cfg.d_model
+            return {
+                "h": jnp.zeros((batch, w), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.float32),
+            }
+        if kind == "ssd":
+            return {
+                "s": jnp.zeros(
+                    (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state_dim),
+                    jnp.float32,
+                ),
+                "conv": jnp.zeros(
+                    (batch, cfg.conv_width - 1, cfg.d_inner), jnp.float32
+                ),
+            }
+        raise ValueError(kind)
+
+    stages = []
+    for pattern, count in cfg.stages():
+        layer = {f"block{j}": block_cache(k) for j, k in enumerate(pattern)}
+        stages.append(
+            jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (count,) + x.shape).copy(), layer
+            )
+        )
+    return stages
+
+
+# ---------------------------------------------------------------- forward --
+def _apply_block(
+    bp,
+    cfg: ModelConfig,
+    kind: str,
+    x,
+    *,
+    positions,
+    cache,
+    mode,
+    use_flash,
+):
+    h = L.rms_norm(x, bp["norm1"], cfg.norm_eps)
+    mixer_cache = cache.get("mixer_cache") if cache else None
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "local_attn"):
+        window = cfg.window_size if kind == "local_attn" else None
+        out, new_c = L.apply_attention(
+            bp["mixer"],
+            cfg,
+            h,
+            positions=positions,
+            window=window,
+            cache=mixer_cache,
+            mode=mode,
+            use_flash=use_flash,
+        )
+    elif kind == "rglru":
+        out, new_c = L.apply_rglru(bp["mixer"], cfg, h, cache=mixer_cache, mode=mode)
+    elif kind == "ssd":
+        out, new_c = L.apply_ssd(bp["mixer"], cfg, h, cache=mixer_cache, mode=mode)
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if "mlp" in bp:
+        h2 = L.rms_norm(x, bp["norm2"], cfg.norm_eps)
+        if cfg.is_moe:
+            out2, aux = L.apply_moe(bp["mlp"], cfg, h2)
+        else:
+            out2 = L.apply_mlp(bp["mlp"], cfg, h2)
+        x = x + out2
+    return x, new_c, aux
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    patch_embeds: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    mode: str = "train",
+    cache=None,
+    use_flash: bool = False,
+):
+    """Returns (logits, new_cache, aux_loss).
+
+    tokens: (B, S) int32.  decode: S == 1 with scalar ``positions``.
+    patch_embeds: (B, P, patch_embed_dim) stub frontend output (VLM).
+    """
+    cdt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"].astype(cdt), tokens, axis=0)  # (B,S,M)
+    if patch_embeds is not None:
+        pe = jnp.einsum(
+            "bpd,dm->bpm", patch_embeds.astype(cdt), params["patch_proj"].astype(cdt)
+        )
+        x = jnp.concatenate([pe, x], axis=1)
+    s = x.shape[1]
+    x = constrain_batch(x)
+    if positions is None:
+        positions = jnp.arange(s)
+
+    total_aux = jnp.zeros((), jnp.float32)
+    new_stages_cache = [] if mode in ("prefill", "decode") else None
+
+    for sidx, (pattern, count) in enumerate(cfg.stages()):
+        stage_params = params["stages"][sidx]
+        stage_cache = cache[sidx] if cache is not None else None
+
+        def layer_body(carry, xs, _pattern=pattern):
+            xx, aux_acc = carry
+            lp, lc = xs
+            ycaches = {}
+            for j, kind in enumerate(_pattern):
+                bc = (
+                    {"mixer_cache": lc[f"block{j}"]} if lc is not None else None
+                )
+                xx, nc, aux = _apply_block(
+                    lp[f"block{j}"],
+                    cfg,
+                    kind,
+                    xx,
+                    positions=positions,
+                    cache=bc,
+                    mode=mode,
+                    use_flash=use_flash,
+                )
+                if nc is not None:
+                    ycaches[f"block{j}"] = nc
+                xx = constrain_batch(xx)
+            return (xx, aux_acc + aux), (ycaches if ycaches else 0.0)
+
+        body = layer_body
+        if cfg.remat == "full" and mode == "train":
+            body = jax.checkpoint(layer_body, prevent_cse=False)
+
+        if cfg.scan_layers:
+            (x, total_aux), ys = jax.lax.scan(
+                body, (x, total_aux), (stage_params, stage_cache)
+            )
+        else:
+            ys_list = []
+            for i in range(count):
+                lp = jax.tree.map(lambda t: t[i], stage_params)
+                lc = (
+                    jax.tree.map(lambda t: t[i], stage_cache)
+                    if stage_cache is not None
+                    else None
+                )
+                (x, total_aux), y = body((x, total_aux), (lp, lc))
+                ys_list.append(y)
+            if isinstance(ys_list[0], dict):
+                ys = jax.tree.map(lambda *xs: jnp.stack(xs), *ys_list)
+            else:
+                ys = jnp.stack(ys_list)
+        if new_stages_cache is not None:
+            new_stages_cache.append(ys)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if mode == "prefill":
+        # §Perf: serving only needs the LAST position's logits — computing
+        # the full (B, S, V) f32 logits tensor dominated the prefill memory
+        # roofline (and its matmul the compute term).
+        x = x[:, -1:, :]
+    # bf16 operands, f32 accumulation: a trailing .astype(f32) makes XLA
+    # convert-and-gather the WEIGHT in f32 (observed in decode, §Perf B5).
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "bsm,vm->bsv", x, params["embed"].astype(cdt),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        logits = jnp.einsum(
+            "bsm,mv->bsv", x, params["unembed"].astype(cdt),
+            preferred_element_type=jnp.float32,
+        )
+    if cfg.padded_vocab != cfg.vocab_size:
+        # Mask padded vocab entries out of the softmax.
+        neg = jnp.full((cfg.padded_vocab - cfg.vocab_size,), -1e30, jnp.float32)
+        logits = logits.at[..., cfg.vocab_size :].set(neg)
+    return logits, new_stages_cache, total_aux
+
+
+# ------------------------------------------------------------ entry points --
+def loss_fn(
+    params,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    *,
+    aux_coef: float = 0.01,
+    use_flash: bool = False,
+):
+    """Next-token CE (+ MoE aux). batch: tokens (B,S), labels (B,S)."""
+    logits, _, aux = forward(
+        params,
+        cfg,
+        batch["tokens"],
+        patch_embeds=batch.get("patch_embeds"),
+        mode="train",
+        use_flash=use_flash,
+    )
+    s_text = batch["labels"].shape[1]
+    logits = logits[:, -s_text:]  # VLM: patches are prefix context only
+    ce = L.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return ce + aux_coef * aux, {"ce": ce, "aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, patch_embeds=None, cache_len=None):
+    """Build the serving cache from a prompt. Returns (last_logits, cache)."""
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    logits, new_cache, _ = forward(
+        params,
+        cfg,
+        tokens,
+        patch_embeds=patch_embeds,
+        mode="prefill",
+    )
+    # Grow full-attention K/V caches to cache_len slots.  Only "attn" blocks:
+    # local_attn ring buffers stay at window size, rglru/ssd states are fixed.
+    def grow_block(c):
+        cur = c["k"].shape[3]
+        if cur < cache_len:
+            pad = ((0, 0),) * 3 + ((0, cache_len - cur), (0, 0))
+            return {k: jnp.pad(v, pad) for k, v in c.items()}
+        return c
+
+    grown = []
+    for (pattern, _), stage in zip(cfg.stages(), new_cache):
+        grown.append(
+            {
+                f"block{j}": (
+                    grow_block(stage[f"block{j}"]) if kind == "attn" else stage[f"block{j}"]
+                )
+                for j, kind in enumerate(pattern)
+            }
+        )
+    return logits[:, -1], grown
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
+    """One serve_step: tokens (B,1) at scalar position ``pos`` (same for the
+    whole batch — continuous batching handles ragged positions upstream)."""
+    logits, new_cache, _ = forward(
+        params, cfg, tokens, positions=jnp.asarray(pos), mode="decode", cache=cache
+    )
+    return logits[:, 0], new_cache

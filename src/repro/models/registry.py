@@ -1,0 +1,89 @@
+"""Uniform model interface over the LM and enc-dec implementations."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+class ModelApi(NamedTuple):
+    init: Callable  # (key) -> Param tree
+    loss: Callable  # (values, batch) -> (loss, metrics)
+    prefill: Callable  # (values, batch) -> (last_logits, cache)
+    decode_step: Callable  # (values, tokens, cache, pos) -> (logits, cache)
+    init_cache: Callable  # (batch, cache_len) -> cache pytree
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    cfg.validate()
+    if cfg.is_encoder_decoder:
+
+        def _prefill(values, batch):
+            return encdec.prefill(
+                values,
+                cfg,
+                batch["frames"],
+                batch["tokens"],
+                cache_len=batch.get("cache_len"),
+            )
+
+        return ModelApi(
+            init=lambda key: encdec.init_encdec(key, cfg),
+            loss=lambda values, batch: encdec.loss_fn(values, cfg, batch),
+            prefill=_prefill,
+            decode_step=lambda values, tokens, cache, pos: encdec.decode_step(
+                values, cfg, tokens, cache, pos
+            ),
+            init_cache=None,
+        )
+
+    def _prefill(values, batch):
+        return lm.prefill(
+            values,
+            cfg,
+            batch["tokens"],
+            patch_embeds=batch.get("patch_embeds"),
+            cache_len=batch.get("cache_len"),
+        )
+
+    return ModelApi(
+        init=lambda key: lm.init_lm(key, cfg),
+        loss=lambda values, batch: lm.loss_fn(values, cfg, batch),
+        prefill=_prefill,
+        decode_step=lambda values, tokens, cache, pos: lm.decode_step(
+            values, cfg, tokens, cache, pos
+        ),
+        init_cache=lambda batch, cache_len: lm.init_cache(
+            cfg, batch, cache_len, dtype=jnp.dtype(cfg.dtype)
+        ),
+    )
+
+
+def init_split(cfg: ModelConfig, key):
+    """Init params and split into (values, logical_axes)."""
+    api = build(cfg)
+    tree = api.init(key)
+    return L.split_params(tree)
+
+
+def abstract_params(cfg: ModelConfig, key=None):
+    """(ShapeDtypeStruct values, axes) without allocating anything."""
+    api = build(cfg)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(api.init, key)
+    values = jax.tree.map(
+        lambda p: p.value, shapes, is_leaf=lambda x: isinstance(x, L.Param)
+    )
+    # axes are static strings -- re-derive them from a concrete tiny init of
+    # the SAME structure via eval_shape metadata: Param.axes survives
+    # eval_shape because namedtuples are pytrees (axes rides along as aux).
+    axes = jax.tree.map(
+        lambda p: p.axes, shapes, is_leaf=lambda x: isinstance(x, L.Param)
+    )
+    return values, axes

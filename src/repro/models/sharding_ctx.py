@@ -1,0 +1,112 @@
+"""Activation-sharding constraints (MaxText-style).
+
+GSPMD propagation can drop the batch sharding through high-rank masked
+softmax graphs (observed: llama3.2 prefill materialised replicated
+(B, kv, g, S, S) logits — §Perf cell A, iteration 3).  The fix is standard
+practice: pin activation shardings explicitly at layer boundaries.
+
+The step builders install the mesh + batch axes here before tracing; model
+code calls ``constrain_batch`` which is a no-op when no context is set
+(unit tests, single-device runs).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, batch_axes: Tuple[str, ...]):
+    """Install an activation-sharding context for trace time."""
+    prev = getattr(_CTX, "value", None)
+    _CTX.value = (mesh, tuple(batch_axes))
+    try:
+        yield
+    finally:
+        _CTX.value = prev
+
+
+@contextlib.contextmanager
+def no_activation_sharding():
+    """Suspend constraints (inside shard_map manual regions, where
+    with_sharding_constraint may not mention the manual axes)."""
+    prev = getattr(_CTX, "value", None)
+    _CTX.value = None
+    try:
+        yield
+    finally:
+        _CTX.value = prev
+
+
+def constrain_expert_dim(x: jax.Array, dim: int) -> jax.Array:
+    """Pin an expert dimension onto the 'model' axis (EP): keeps the MoE
+    dispatch/expert-ffn/combine einsums expert-local instead of letting
+    GSPMD all-gather expert weights (§Perf cell B, iteration 4)."""
+    ctx = getattr(_CTX, "value", None)
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    if "model" not in mesh.axis_names or x.shape[dim] % mesh.shape["model"] != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = "model"
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+    except ValueError:  # manual-axis context (see constrain_batch)
+        return x
+
+
+def constrain_batch_heads(x: jax.Array) -> jax.Array:
+    """Constraint for (B, H, S, D) attention tensors: batch over the data
+    axes AND heads over 'model' (when divisible).  NOTE a sharding
+    constraint is a FULL spec — constraining only the batch dim would force
+    the heads dim replicated, un-sharding TP attention (observed: 16x S²
+    replication on internvl2 — §Perf post-sweep fix)."""
+    ctx = getattr(_CTX, "value", None)
+    if ctx is None:
+        return x
+    mesh, baxes = ctx
+    import math
+
+    n_data = math.prod(mesh.shape[a] for a in baxes)
+    spec = [None] * x.ndim
+    if x.shape[0] % n_data == 0:
+        spec[0] = baxes if len(baxes) > 1 else baxes[0]
+    if "model" in mesh.axis_names and x.shape[1] % mesh.shape["model"] == 0:
+        spec[1] = "model"
+    if all(s is None for s in spec):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+    except ValueError:  # manual-axis context
+        return x
+
+
+def constrain_batch(x: jax.Array, batch_dim: int = 0) -> jax.Array:
+    """Constrain ``x``'s batch dim onto the data axes (no-op without ctx,
+    or when the batch does not divide the data-parallel world)."""
+    ctx = getattr(_CTX, "value", None)
+    if ctx is None:
+        return x
+    mesh, baxes = ctx
+    import math
+
+    n_data = math.prod(mesh.shape[a] for a in baxes)
+    if x.shape[batch_dim] % n_data != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = baxes if len(baxes) > 1 else baxes[0]
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+    except ValueError:
+        # Inside shard_map the data axes are MANUAL (eigen train step):
+        # the batch dim is already physically sharded there — no-op.
+        return x

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401
+from repro.optim.grad_utils import clip_by_global_norm, global_norm  # noqa: F401

@@ -1,0 +1,99 @@
+"""Hand-rolled AdamW (no optax dependency), pytree-generic, f32 state.
+
+Supports bf16 moment storage (``moments_dtype``) as a memory/bandwidth
+optimization explored in §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moments_dtype: str = "float32"  # float32 | bfloat16
+    skip_nonfinite: bool = True  # NaN-guard: skip the step, keep the state
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    dt = jnp.float32
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dt), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _cast_state(state, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.moments_dtype)
+    return {
+        "m": jax.tree.map(lambda x: x.astype(dt), state["m"]),
+        "v": jax.tree.map(lambda x: x.astype(dt), state["v"]),
+        "step": state["step"],
+    }
+
+
+def adamw_update(
+    grads,
+    state,
+    params,
+    *,
+    lr: jax.Array,
+    cfg: AdamWConfig,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """Returns (new_params, new_state, metrics)."""
+    from repro.optim.grad_utils import clip_by_global_norm, global_norm
+
+    gnorm = global_norm(grads)
+    finite = jnp.isfinite(gnorm)
+    if cfg.clip_norm > 0:
+        grads = clip_by_global_norm(grads, cfg.clip_norm, gnorm)
+
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mh = m_new / c1
+        vh = v_new / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:  # no decay on norms/biases
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (
+            p_new.astype(p.dtype),
+            m_new.astype(jnp.dtype(cfg.moments_dtype)),
+            v_new.astype(jnp.dtype(cfg.moments_dtype)),
+        )
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+
+    if cfg.skip_nonfinite:
+        keep = lambda new, old: jax.tree.map(
+            lambda a, b: jnp.where(finite, a, b), new, old
+        )
+        new_params = keep(new_params, params)
+        new_m = keep(new_m, state["m"])
+        new_v = keep(new_v, state["v"])
+        step = jnp.where(finite, step, state["step"])
+
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    metrics = {"grad_norm": gnorm, "step_skipped": (~finite).astype(jnp.float32)}
+    return new_params, new_state, metrics

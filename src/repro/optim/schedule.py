@@ -1,0 +1,30 @@
+"""Learning-rate schedules (jit-friendly step -> lr functions)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    *,
+    end_frac: float = 0.1,
+):
+    """Linear warmup then cosine decay to ``end_frac * peak_lr``."""
+
+    def schedule(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * s / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip(
+            (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (end_frac + (1 - end_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)

@@ -1,0 +1,75 @@
+"""Straggler detection: step-time EMA monitor with slow-step escalation.
+
+At multi-pod scale the dominant straggler symptom visible from ANY single
+worker is elongated step time (collectives synchronise everyone to the
+slowest participant).  The monitor keeps an EMA + variance of step times,
+flags steps slower than ``threshold`` sigmas, and escalates after
+``patience`` consecutive slow steps — the escalation callback is where a
+production deployment triggers hot-spare swap / checkpoint-and-reshard
+(here: logged + surfaced to the train loop, which can checkpoint early).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Optional
+
+log = logging.getLogger("repro.straggler")
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    alpha: float = 0.05        # EMA smoothing
+    threshold: float = 4.0     # sigmas above mean -> slow
+    patience: int = 5          # consecutive slow steps before escalation
+    warmup: int = 10           # ignore compile/first steps
+    on_escalate: Optional[Callable[[int, float], None]] = None
+
+    _mean: float = 0.0
+    _var: float = 0.0
+    _n: int = 0
+    _slow_run: int = 0
+    escalations: int = 0
+
+    def record(self, step: int, dt: float) -> bool:
+        """Record one step duration. Returns True if the step was slow."""
+        self._n += 1
+        if self._n <= self.warmup:
+            self._mean = dt if self._n == 1 else (self._mean + dt) / 2
+            return False
+        delta = dt - self._mean
+        self._mean += self.alpha * delta
+        self._var = (1 - self.alpha) * (self._var + self.alpha * delta * delta)
+        sigma = max(self._var**0.5, 1e-9)
+        slow = dt > self._mean + self.threshold * sigma and dt > 1.5 * self._mean
+        if slow:
+            self._slow_run += 1
+            log.warning(
+                "slow step %d: %.4fs (mean %.4fs, sigma %.4fs)",
+                step, dt, self._mean, sigma,
+            )
+            if self._slow_run >= self.patience:
+                self.escalations += 1
+                self._slow_run = 0
+                if self.on_escalate:
+                    self.on_escalate(step, dt)
+        else:
+            self._slow_run = 0
+        return slow
+
+    @property
+    def mean_step_time(self) -> float:
+        return self._mean
+
+
+class StepTimer:
+    def __init__(self):
+        self._t0 = time.perf_counter()
+
+    def lap(self) -> float:
+        t = time.perf_counter()
+        dt = t - self._t0
+        self._t0 = t
+        return dt

@@ -1,0 +1,118 @@
+"""Hypothesis property tests on system invariants (MoE routing conservation,
+RoPE isometry, RG-LRU stability, subspace-iteration gap dependence)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced_config
+from repro.models.layers import (
+    apply_moe_einsum,
+    apply_moe_sort,
+    apply_rope,
+    init_moe,
+    moe_capacity,
+    split_params,
+)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=1000),
+    s=st.sampled_from([8, 16, 32]),
+)
+def test_moe_sort_equals_einsum_no_drop(seed, s):
+    """The two dispatch implementations are the same function when nothing
+    is dropped, for random inputs and sequence lengths."""
+    cfg = dataclasses.replace(
+        get_reduced_config("qwen3-moe-30b-a3b"), capacity_factor=100.0
+    )
+    values, _ = split_params(init_moe(jax.random.PRNGKey(0), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, s, cfg.d_model))
+    a, aux_a = apply_moe_einsum(values, cfg, x)
+    b, aux_b = apply_moe_sort(values, cfg, x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+    assert abs(float(aux_a - aux_b)) < 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1000))
+def test_moe_capacity_bounds_work(seed):
+    """Output is bounded: dropped tokens contribute zero, kept tokens get a
+    convex combination of expert outputs (gates sum to 1)."""
+    cfg = get_reduced_config("qwen3-moe-30b-a3b")  # tight capacity
+    values, _ = split_params(init_moe(jax.random.PRNGKey(1), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 64, cfg.d_model))
+    y, aux = apply_moe_einsum(values, cfg, x)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux) >= 1.0 - 1e-3  # Switch aux loss is >= 1 at optimum
+    cap = moe_capacity(cfg, 64)
+    assert cap * cfg.num_experts >= 64 * cfg.num_experts_per_token / 2
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=1000),
+    fraction=st.sampled_from([0.5, 1.0]),
+)
+def test_rope_is_isometry(seed, fraction):
+    """Rotary embedding preserves norms and pairwise relative angles:
+    <rope(q,i), rope(k,j)> depends only on i - j (for full-fraction RoPE,
+    per-2D-plane rotation property)."""
+    d = 32
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 8, 2, d))
+    pos = jnp.arange(8)
+    y = apply_rope(x, pos, theta=1e4, fraction=fraction)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-4,
+    )
+
+
+def test_rope_relative_shift_invariance():
+    """<rope(q, p), rope(k, p+delta)> must be independent of p."""
+    d = 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    k = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    def ip(p, delta):
+        qq = apply_rope(q[None, None, None, :], jnp.array([p]), 1e4)
+        kk = apply_rope(k[None, None, None, :], jnp.array([p + delta]), 1e4)
+        return float(jnp.sum(qq * kk))
+    for delta in (0, 3, 7):
+        vals = [ip(p, delta) for p in (0, 5, 11)]
+        assert max(vals) - min(vals) < 1e-3, (delta, vals)
+
+
+def test_rglru_gate_is_contractive():
+    """RG-LRU decay a_t must stay in (0, 1): bounded state for any input."""
+    from repro.models.layers import apply_rglru, init_rglru
+
+    cfg = get_reduced_config("recurrentgemma-2b")
+    values, _ = split_params(init_rglru(jax.random.PRNGKey(0), cfg))
+    x = 100.0 * jax.random.normal(jax.random.PRNGKey(1), (1, 64, cfg.d_model))
+    y, _ = apply_rglru(values, cfg, x.astype(jnp.float32), mode="train")
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@settings(max_examples=8, deadline=None)
+@given(gap=st.sampled_from([0.5, 0.2, 0.05]))
+def test_subspace_iteration_rate_depends_on_gap(gap):
+    """Convergence after a FIXED iteration budget degrades as the eigengap
+    shrinks — the lambda_{r+1}/lambda_r rate the paper's Assumption 1 buys."""
+    from repro.core import dist_2, subspace_iteration, top_r_eigh
+    from repro.data import synthetic as syn
+
+    d, r = 64, 3
+    tau = jnp.concatenate(
+        [jnp.ones((r,)), (1.0 - gap) * 0.95 ** jnp.arange(d - r)]
+    )
+    sigma, u, _ = syn.covariance_from_spectrum(jax.random.PRNGKey(0), tau)
+    v, _ = subspace_iteration(sigma, r, iters=8, key=jax.random.PRNGKey(1))
+    err = float(dist_2(v, u[:, :r]))
+    # after 8 iters: rate ~ ((1-gap))^8
+    assert err < 1.5 * (1.0 - gap) ** 8 + 5e-3, (gap, err)

@@ -1,0 +1,186 @@
+"""Pallas kernel validation: shape/dtype sweeps vs. the ref.py oracles
+(interpret mode on CPU), plus hypothesis property sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import covariance, flash_attention, procrustes_align, ref
+from repro.kernels import ops
+
+TOL = {jnp.float32: 2e-4, jnp.bfloat16: 2e-1}
+
+
+# ---------------------------------------------------------------- gram ----
+@pytest.mark.parametrize("n,d", [(64, 64), (300, 200), (257, 129), (8, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_shapes(n, d, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d), dtype=dtype)
+    got = covariance.gram(x, bn=128, bd=128, interpret=True)
+    want = ref.gram(x)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=TOL[dtype] * d, rtol=1e-2
+    )
+
+
+@pytest.mark.parametrize("symmetric", [False, True])
+def test_gram_block_size_invariance(symmetric):
+    x = jax.random.normal(jax.random.PRNGKey(1), (192, 256))
+    outs = [
+        covariance.gram(x, bn=bn, bd=bd, symmetric=symmetric, interpret=True)
+        for bn, bd in [(64, 64), (128, 128), (192, 256)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(
+            np.asarray(outs[0]), np.asarray(o), atol=1e-3
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=8, max_value=200),
+    d=st.integers(min_value=8, max_value=160),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_gram_property(n, d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    got = covariance.gram(x, bn=64, bd=64, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.gram(x)), atol=1e-3 * d
+    )
+
+
+# --------------------------------------------------- procrustes stages ----
+@pytest.mark.parametrize("m,d,r", [(2, 64, 4), (6, 500, 16), (3, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_batched_gram(m, d, r, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    vs = jax.random.normal(k1, (m, d, r), dtype=dtype)
+    rf = jax.random.normal(k2, (d, r), dtype=dtype)
+    got = procrustes_align.batched_gram(vs, rf, bk=128, interpret=True)
+    want = ref.batched_gram(vs, rf)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=TOL[dtype] * d, rtol=1e-2
+    )
+
+
+@pytest.mark.parametrize("m,d,r", [(2, 64, 4), (6, 500, 16), (8, 1000, 32)])
+def test_align_average(m, d, r):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    vs = jax.random.normal(k1, (m, d, r))
+    zs = jax.random.normal(k2, (m, r, r))
+    got = procrustes_align.align_average(vs, zs, bd=128, interpret=True)
+    want = ref.align_average(vs, zs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_kernelized_algorithm1_end_to_end():
+    """Algorithm 1 with every stage routed through the kernels must equal
+    the pure-jnp Algorithm 1."""
+    from repro.core import procrustes_fix_average, qr_orthonormalize
+
+    key = jax.random.PRNGKey(3)
+    m, d, r = 5, 160, 8
+    vs = jnp.stack(
+        [
+            jnp.linalg.qr(jax.random.normal(k, (d, r)))[0]
+            for k in jax.random.split(key, m)
+        ]
+    )
+    refsol = vs[0]
+    g = procrustes_align.batched_gram(vs, refsol, bk=64, interpret=True)
+    u, _, wt = jnp.linalg.svd(g)
+    zs = u @ wt
+    vbar = procrustes_align.align_average(vs, zs, bd=64, interpret=True)
+    got = qr_orthonormalize(vbar)
+    want = procrustes_fix_average(vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+# ------------------------------------------------------ flash attention ----
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,t,d",
+    [
+        (1, 2, 2, 128, 128, 64),   # MHA
+        (2, 4, 2, 256, 256, 64),   # GQA 2:1
+        (1, 8, 1, 128, 128, 32),   # MQA
+        (1, 2, 1, 96, 160, 64),    # uneven s/t, padding path
+        (1, 2, 2, 32, 256, 64),    # suffix queries (chunked prefill)
+    ],
+)
+def test_flash_attention_shapes(b, hq, hkv, s, t, d):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, hq, s, d))
+    k = jax.random.normal(ks[1], (b, hkv, t, d))
+    v = jax.random.normal(ks[2], (b, hkv, t, d))
+    got = flash_attention.flash_attention(q, k, v, bq=64, bk=64, interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 64, 1024])
+def test_flash_attention_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    got = flash_attention.flash_attention(
+        q, k, v, window=window, bq=64, bk=64, interpret=True
+    )
+    want = ref.attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64), dtype=jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64), dtype=jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64), dtype=jnp.bfloat16)
+    got = flash_attention.flash_attention(q, k, v, bq=64, bk=64, interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=3e-2
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.sampled_from([64, 128, 192]),
+    bq=st.sampled_from([32, 64]),
+    bk=st.sampled_from([32, 64]),
+    seed=st.integers(min_value=0, max_value=100),
+)
+def test_flash_block_size_invariance(s, bq, bk, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 2, s, 32))
+    k = jax.random.normal(ks[1], (1, 2, s, 32))
+    v = jax.random.normal(ks[2], (1, 2, s, 32))
+    got = flash_attention.flash_attention(q, k, v, bq=bq, bk=bk, interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ----------------------------------------------------------------- ops ----
+def test_ops_dispatch_cpu():
+    """On CPU the default path must be the oracle (no interpret overhead)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
+    np.testing.assert_allclose(
+        np.asarray(ops.gram(x)), np.asarray(ref.gram(x)), atol=1e-5
+    )
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 16, 8))
+    np.testing.assert_allclose(
+        np.asarray(ops.attention(q, q, q)),
+        np.asarray(ref.attention(q, q, q)),
+        atol=1e-5,
+    )
+
+
+def test_empirical_covariance_kernel_flag():
+    from repro.core import empirical_covariance
+
+    x = jax.random.normal(jax.random.PRNGKey(4), (100, 60))
+    a = empirical_covariance(x)
+    b = empirical_covariance(x, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)

@@ -1,0 +1,106 @@
+"""Optimizer tests: AdamW vs numpy reference, NaN-guard, schedules, and the
+eigen-compression building blocks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.eigen_compress import (
+    EigenCompressConfig,
+    _local_basis,
+    init_state,
+)
+from repro.optim.grad_utils import clip_by_global_norm, global_norm
+from repro.optim.schedule import warmup_cosine
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = AdamWConfig(weight_decay=0.0, clip_norm=0.0)
+    p = {"w": jnp.array([[1.0, -2.0], [0.5, 3.0]])}
+    g = {"w": jnp.array([[0.1, 0.2], [-0.3, 0.4]])}
+    st = adamw_init(p)
+    lr = 0.1
+    new_p, st, _ = adamw_update(g, st, p, lr=jnp.float32(lr), cfg=cfg)
+    # numpy reference (step 1 bias correction)
+    gn = np.array([[0.1, 0.2], [-0.3, 0.4]])
+    m = 0.1 * gn
+    v = 0.05 * gn * gn
+    mh = m / 0.1
+    vh = v / 0.05
+    want = np.array([[1.0, -2.0], [0.5, 3.0]]) - lr * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-5)
+
+
+def test_adamw_weight_decay_only_on_matrices():
+    cfg = AdamWConfig(weight_decay=0.1, clip_norm=0.0)
+    p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    g = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+    st = adamw_init(p)
+    new_p, _, _ = adamw_update(g, st, p, lr=jnp.float32(1.0), cfg=cfg)
+    assert float(new_p["w"][0, 0]) < 1.0  # decayed
+    assert float(new_p["b"][0]) == 1.0  # not decayed
+
+
+def test_nan_guard_skips_step():
+    cfg = AdamWConfig()
+    p = {"w": jnp.ones((2, 2))}
+    g = {"w": jnp.full((2, 2), jnp.nan)}
+    st = adamw_init(p)
+    new_p, new_st, m = adamw_update(g, st, p, lr=jnp.float32(0.1), cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(new_p["w"]), np.ones((2, 2)))
+    assert int(new_st["step"]) == 0
+    assert float(m["step_skipped"]) == 1.0
+
+
+def test_convergence_on_quadratic():
+    """AdamW must drive a simple quadratic to its minimum."""
+    cfg = AdamWConfig(weight_decay=0.0)
+    target = jnp.array([[1.0, -2.0], [3.0, 0.5]])
+    p = {"w": jnp.zeros((2, 2))}
+    st = adamw_init(p)
+
+    @jax.jit
+    def step(p, st):
+        g = jax.grad(lambda q: jnp.sum((q["w"] - target) ** 2))(p)
+        return adamw_update(g, st, p, lr=jnp.float32(0.05), cfg=cfg)
+
+    for _ in range(300):
+        p, st, _ = step(p, st)
+    np.testing.assert_allclose(np.asarray(p["w"]), np.asarray(target), atol=1e-2)
+
+
+def test_global_norm_and_clip():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6
+    c = clip_by_global_norm(t, 1.0)
+    assert abs(float(global_norm(c)) - 1.0) < 1e-5
+
+
+def test_warmup_cosine_shape():
+    s = warmup_cosine(1.0, 10, 100)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert float(s(100)) < float(s(50)) < float(s(10))
+    assert float(s(100)) >= 0.1 - 1e-6  # end_frac floor
+
+
+def test_local_basis_captures_top_subspace():
+    """_local_basis(G) must span G's leading left singular space."""
+    key = jax.random.PRNGKey(0)
+    u, _ = jnp.linalg.qr(jax.random.normal(key, (64, 4)))
+    vt = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    g = u @ vt + 0.01 * jax.random.normal(jax.random.PRNGKey(2), (64, 32))
+    q = _local_basis(g, 4, iters=8, key=jax.random.PRNGKey(3))
+    from repro.core import dist_2
+
+    assert float(dist_2(q, u)) < 0.05
+
+
+def test_eigen_state_shapes():
+    ecfg = EigenCompressConfig(rank=8)
+    st = init_state(jnp.zeros((3, 64, 32)), ecfg)
+    assert st["basis"].shape == (3, 64, 8)
+    assert st["m"].shape == (3, 8, 32)
+    assert st["err"].shape == (3, 64, 32)

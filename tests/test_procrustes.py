@@ -1,0 +1,119 @@
+"""Unit + property tests for the Procrustes alignment primitive."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    align,
+    align_batch,
+    procrustes_distance,
+    procrustes_rotation,
+    sign_fix,
+)
+from repro.data.synthetic import random_orthogonal
+
+
+def _orthonormal(key, d, r):
+    g = jax.random.normal(key, (d, r))
+    q, _ = jnp.linalg.qr(g)
+    return q
+
+
+def test_rotation_recovery():
+    """align(V @ Z, V) must undo a known rotation Z exactly."""
+    key = jax.random.PRNGKey(0)
+    v = _orthonormal(key, 64, 6)
+    z = random_orthogonal(jax.random.PRNGKey(1), 6)
+    out = align(v @ z, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v), atol=1e-5)
+
+
+def test_rotation_is_orthogonal():
+    key = jax.random.PRNGKey(2)
+    a = _orthonormal(key, 40, 5)
+    b = _orthonormal(jax.random.PRNGKey(3), 40, 5)
+    z = procrustes_rotation(a, b)
+    np.testing.assert_allclose(
+        np.asarray(z.T @ z), np.eye(5), atol=1e-5
+    )
+
+
+def test_alignment_is_optimal():
+    """No random orthogonal Z may beat the Procrustes solution."""
+    key = jax.random.PRNGKey(4)
+    a = _orthonormal(key, 30, 4)
+    b = _orthonormal(jax.random.PRNGKey(5), 30, 4)
+    best = float(jnp.linalg.norm(align(a, b) - b))
+    for seed in range(20):
+        z = random_orthogonal(jax.random.PRNGKey(100 + seed), 4)
+        assert float(jnp.linalg.norm(a @ z - b)) >= best - 1e-5
+
+
+def test_sign_fix_equivalence_r1():
+    """Paper: for r=1 Procrustes fixing reduces to Garber et al. sign fixing."""
+    key = jax.random.PRNGKey(6)
+    for seed in range(8):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        v = _orthonormal(k1, 25, 1)
+        ref = _orthonormal(k2, 25, 1)
+        a = align(v, ref)
+        s = sign_fix(v, ref)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(s), atol=1e-5)
+    del key
+
+
+def test_procrustes_distance_zero_on_rotations():
+    v = _orthonormal(jax.random.PRNGKey(7), 32, 4)
+    z = random_orthogonal(jax.random.PRNGKey(8), 4)
+    # sqrt of a cancelling f32 sum — tolerance is sqrt(eps)-ish
+    assert float(procrustes_distance(v @ z, v)) < 5e-3
+
+
+def test_align_batch_matches_loop():
+    keys = jax.random.split(jax.random.PRNGKey(9), 5)
+    vs = jnp.stack([_orthonormal(k, 20, 3) for k in keys])
+    ref = _orthonormal(jax.random.PRNGKey(10), 20, 3)
+    batched = align_batch(vs, ref)
+    for i in range(5):
+        np.testing.assert_allclose(
+            np.asarray(batched[i]), np.asarray(align(vs[i], ref)), atol=1e-6
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(min_value=4, max_value=48),
+    r=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_rotation_invariance(d, r, seed):
+    """align(V Z, ref) == align(V, ref) for any orthogonal Z — the estimator
+    must be invariant to the arbitrary rotation of the local solution."""
+    r = min(r, d)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    v = _orthonormal(k1, d, r)
+    ref = _orthonormal(k2, d, r)
+    z = random_orthogonal(k3, r)
+    a1 = align(v, ref)
+    a2 = align(v @ z, ref)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(min_value=4, max_value=48),
+    r=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_alignment_never_hurts(d, r, seed):
+    """||align(V, ref) - ref||_F <= ||V - ref||_F by optimality."""
+    r = min(r, d)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    v = _orthonormal(k1, d, r)
+    ref = _orthonormal(k2, d, r)
+    before = float(jnp.linalg.norm(v - ref))
+    after = float(jnp.linalg.norm(align(v, ref) - ref))
+    assert after <= before + 1e-4
