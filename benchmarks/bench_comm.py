@@ -44,9 +44,10 @@ def comm_measured():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
+from repro import compat
 from repro.core.distributed import distributed_pca
 from repro.launch.hlo_analysis import collective_bytes
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 d, r, n = 512, 16, 256
 samples = jax.ShapeDtypeStruct((8 * n, d), jnp.float32)
 fn = jax.jit(lambda s: distributed_pca(s, mesh, r, n_iter=1))

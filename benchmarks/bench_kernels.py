@@ -1,9 +1,12 @@
 """Kernel micro-benchmarks: wall time of the XLA oracle paths (the compiled
-reality on CPU) + interpret-mode correctness deltas for the Pallas kernels.
+reality on CPU) + interpret-mode correctness deltas for the Pallas kernels,
+plus an END-TO-END backend comparison through the public aggregation API
+(``procrustes_fix_average(..., backend=...)``) rather than kernel-by-kernel.
 
 On-TPU wall-time comparison is not possible in this container; what IS
 measured: oracle wall time (what the benchmark harness actually runs) and
-max|kernel - oracle| in interpret mode (correctness evidence).
+max|kernel - oracle| in interpret mode (correctness evidence).  On TPU the
+same functions run compiled, so the e2e rows become a real A/B.
 """
 
 from __future__ import annotations
@@ -15,7 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
+from repro.core import procrustes_fix_average
 from repro.kernels import covariance, flash_attention, procrustes_align, ref
+from repro.kernels.ops import on_tpu
 
 
 def _wall(fn, *args, reps=5):
@@ -61,6 +66,32 @@ def kernel_procrustes():
     )
     emit(f"kernel_batched_gram[m={m},d={d},r={r}]", us1, f"interpret_err={e1:.2e}")
     emit(f"kernel_align_average[m={m},d={d},r={r}]", us2, f"interpret_err={e2:.2e}")
+
+
+def kernel_procrustes_e2e():
+    """Both backends end-to-end through the public API (Algorithm 1 body).
+
+    Wall time is reported for each backend; on CPU the pallas number is
+    interpret-mode (correctness path, expected slow) and the derived column
+    carries the cross-backend max|Δ|, which is the claim CI enforces.
+    Shapes include a ragged one (d % block != 0, r < 8).
+    """
+    for m, d, r in ((16, 2048, 64), (8, 205, 5)):
+        key = jax.random.PRNGKey(0)
+        vs = jnp.linalg.qr(jax.random.normal(key, (m, d, r)))[0]
+        x = jax.jit(lambda v: procrustes_fix_average(v, backend="xla"))
+        p = jax.jit(lambda v: procrustes_fix_average(v, backend="pallas"))
+        us_x = _wall(x, vs)
+        us_p = _wall(p, vs) if on_tpu() else float("nan")
+        err = float(jnp.abs(x(vs) - p(vs)).max())
+        emit(
+            f"procrustes_e2e_xla[m={m},d={d},r={r}]", us_x,
+            f"backend_delta={err:.2e}",
+        )
+        emit(
+            f"procrustes_e2e_pallas[m={m},d={d},r={r}]", us_p,
+            "compiled" if on_tpu() else "interpret-mode (timing n/a on CPU)",
+        )
 
 
 def kernel_flash():

@@ -34,6 +34,7 @@ def main() -> None:
         F.remark1_cost,
         K.kernel_gram,
         K.kernel_procrustes,
+        K.kernel_procrustes_e2e,
         K.kernel_flash,
         C.comm_table,
         C.comm_measured,

@@ -1,0 +1,164 @@
+"""Version-portability shims for JAX APIs that moved between releases.
+
+The codebase targets the modern spellings (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.tree.flatten_with_path``) but
+must run on whatever JAX the container ships (0.4.x at the time of writing,
+where ``shard_map`` still lives in ``jax.experimental`` and
+``jax.sharding.AxisType`` does not exist).  Every call site in the tree goes
+through this module instead of the raw API so the resolution happens exactly
+once, at import time.
+
+Mapping rules (new spelling -> 0.4.x fallback):
+
+  ``jax.shard_map(f, mesh, in_specs, out_specs, check_vma=..., axis_names=...)``
+      -> ``jax.experimental.shard_map.shard_map`` with ``check_vma`` renamed
+         to ``check_rep`` and ``axis_names`` (the *manual* axes) translated to
+         the complementary ``auto=`` frozenset.
+  ``jax.make_mesh(shape, axes, axis_types=...)``
+      -> ``jax.make_mesh(shape, axes)`` (axis types dropped: pre-AxisType
+         meshes have no explicit mode and behave as the 'auto' default every
+         caller here requests), or an explicit ``Mesh(create_device_mesh(...))``
+         on even older versions without ``jax.make_mesh``.
+  ``jax.tree.flatten_with_path`` -> ``jax.tree_util.tree_flatten_with_path``.
+
+Nothing here inspects arrays; the shims are zero-overhead wrappers resolved
+against module attributes.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+
+__all__ = [
+    "AXIS_TYPE_AUTO",
+    "HAS_NATIVE_SHARD_MAP",
+    "auto_axis_types",
+    "make_mesh",
+    "shard_map",
+    "tree_flatten_with_path",
+]
+
+
+# --------------------------------------------------------------- AxisType --
+
+try:
+    AXIS_TYPE_AUTO: Any = jax.sharding.AxisType.Auto
+except AttributeError:  # jax < 0.5: meshes have no explicit axis modes
+    AXIS_TYPE_AUTO = None
+
+
+def auto_axis_types(n: int) -> Optional[Tuple[Any, ...]]:
+    """``(AxisType.Auto,) * n`` on new JAX, ``None`` where the concept
+    doesn't exist (callers must tolerate/omit a ``None``)."""
+    if AXIS_TYPE_AUTO is None:
+        return None
+    return (AXIS_TYPE_AUTO,) * n
+
+
+# --------------------------------------------------------------- make_mesh --
+
+def _make_mesh_impl() -> Callable[..., jax.sharding.Mesh]:
+    native = getattr(jax, "make_mesh", None)
+    if native is not None:
+        try:
+            takes_axis_types = "axis_types" in inspect.signature(native).parameters
+        except (TypeError, ValueError):  # pragma: no cover - exotic builds
+            takes_axis_types = False
+
+        def _make(shape, axes, *, devices=None):
+            kw = {}
+            if devices is not None:
+                kw["devices"] = devices
+            if takes_axis_types:
+                kw["axis_types"] = auto_axis_types(len(axes))
+            return native(tuple(shape), tuple(axes), **kw)
+
+        return _make
+
+    from jax.experimental import mesh_utils  # pragma: no cover - jax < 0.4.35
+
+    def _make(shape, axes, *, devices=None):  # pragma: no cover
+        dev = mesh_utils.create_device_mesh(tuple(shape), devices=devices)
+        return jax.sharding.Mesh(dev, tuple(axes))
+
+    return _make
+
+
+_MAKE_MESH = _make_mesh_impl()
+
+
+def make_mesh(
+    shape: Sequence[int],
+    axes: Sequence[str],
+    *,
+    devices: Optional[Sequence[Any]] = None,
+) -> jax.sharding.Mesh:
+    """Build a mesh with 'auto' axis types wherever the installed JAX
+    supports the concept, silently omitting them where it doesn't."""
+    return _MAKE_MESH(shape, axes, devices=devices)
+
+
+# --------------------------------------------------------------- shard_map --
+
+HAS_NATIVE_SHARD_MAP: bool = hasattr(jax, "shard_map")
+
+
+def _experimental_shard_map() -> Callable[..., Any]:
+    from jax.experimental.shard_map import shard_map as sm
+
+    return sm
+
+
+def shard_map(
+    f: Callable[..., Any],
+    *,
+    mesh: jax.sharding.Mesh,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: Optional[bool] = None,
+    axis_names: Optional[set] = None,
+) -> Callable[..., Any]:
+    """``jax.shard_map`` with old/new kwarg spellings reconciled.
+
+    Args:
+      f: per-shard function.
+      mesh: the device mesh.
+      in_specs / out_specs: PartitionSpec pytrees, as in both APIs.
+      check_vma: new-API name for the replication check (old ``check_rep``);
+        ``None`` keeps each implementation's default.
+      axis_names: the *manual* mesh axes (new API).  On old JAX this is
+        translated to the complementary ``auto=`` frozenset; ``None`` means
+        all axes are manual (both APIs' default).
+    """
+    if HAS_NATIVE_SHARD_MAP:
+        kw: dict = {}
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+    sm = _experimental_shard_map()
+    kw = {}
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+# -------------------------------------------------------------- tree paths --
+
+def _tree_flatten_with_path_impl() -> Callable[..., Any]:
+    tree_mod = getattr(jax, "tree", None)
+    fn = getattr(tree_mod, "flatten_with_path", None) if tree_mod else None
+    if fn is not None:
+        return fn
+    return jax.tree_util.tree_flatten_with_path
+
+
+tree_flatten_with_path = _tree_flatten_with_path_impl()

@@ -11,9 +11,20 @@ i.e. two d·r all-reduces per round — strictly less traffic than the
 coordinator gather for m > 2, with bit-identical output to the serial
 reference (``repro.core.eigenspace``), which the tests assert.
 
+Backend dispatch: every aggregation entry point takes ``backend=``
+("xla" | "pallas" | "auto").  "xla" keeps the psum topology above.
+"pallas" switches to the paper's coordinator topology — one all-gather of
+the m local bases per shard, then the stacked Algorithm 1/2 with its Gram
+and apply stages routed through the ``repro.kernels.procrustes_align``
+Pallas kernels (compiled on TPU, interpret mode elsewhere); refinement
+rounds then cost no further communication.  "auto" resolves to "pallas" on
+TPU and "xla" elsewhere.  Both topologies compute the same estimator (the
+tests assert parity).
+
 All collective functions here are written to be called *inside*
-``jax.shard_map`` with a named mesh axis; the ``distributed_pca`` driver
-wraps them for end-to-end use.
+``shard_map`` with a named mesh axis; the ``distributed_pca`` driver wraps
+them for end-to-end use.  The shard_map / mesh spellings resolve through
+``repro.compat`` so the module runs on both old and new JAX.
 """
 
 from __future__ import annotations
@@ -25,10 +36,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import procrustes
 from repro.core.covariance import empirical_covariance
-from repro.core.eigenspace import qr_orthonormalize
+from repro.core.eigenspace import procrustes_fix_average, qr_orthonormalize
 from repro.core.subspace import local_eigenbasis
+from repro.kernels.ops import resolve_backend
 
 __all__ = [
     "broadcast_from",
@@ -59,19 +72,33 @@ def procrustes_average_collective(
     axis_name: str,
     n_iter: int = 1,
     ref: jax.Array | None = None,
+    backend: str = "xla",
 ) -> jax.Array:
     """Algorithm 1 (n_iter=1) / Algorithm 2 (n_iter>1) across a mesh axis.
 
     Args:
       v_local: (d, r) local leading eigenbasis on each shard.
       axis_name: mesh axis playing the role of "machines".
-      n_iter: refinement rounds; each costs one extra psum(d*r).
+      n_iter: refinement rounds; each costs one extra psum(d*r) on the
+        "xla" backend and is communication-free on "pallas" (the stack is
+        already gathered).
       ref: optional externally supplied reference (e.g. previous training
         step's basis, used by the eigen-compressed optimizer); defaults to
         shard 0's solution as in the paper.
+      backend: "xla" (psum topology), "pallas" (all-gather + kernel-backed
+        stacked aggregation), or "auto".
 
     Returns the replicated (d, r) Procrustes-fixed average.
     """
+    if resolve_backend(backend) == "pallas":
+        # Coordinator topology, replicated on every shard: gather the m
+        # local bases once, then run the kernel-dispatched stacked path.
+        vs = jax.lax.all_gather(v_local, axis_name)  # (m, d, r)
+        if ref is None:
+            ref = vs[0]
+        for _ in range(max(n_iter, 1)):
+            ref = procrustes_fix_average(vs, ref, backend="pallas")
+        return ref
     m = axis_size(axis_name)
     if ref is None:
         ref = broadcast_from(v_local, axis_name, src=0)
@@ -114,12 +141,14 @@ def distributed_pca(
     solver: str = "eigh",
     iters: int = 30,
     use_kernel: bool = False,
+    backend: str = "xla",
 ) -> jax.Array:
     """End-to-end one-shot distributed PCA on a mesh.
 
     ``samples`` (N, d) are sharded along the leading axis over ``data_axis``;
     each shard forms its local covariance, local top-r basis, and the mesh
-    runs the Procrustes-fixed average.  Returns the (d, r) estimate.
+    runs the Procrustes-fixed average.  ``backend`` selects the aggregation
+    path (see module docstring).  Returns the (d, r) estimate.
     """
 
     def shard_fn(x_shard: jax.Array) -> jax.Array:
@@ -127,20 +156,18 @@ def distributed_pca(
             x_shard, r, solver=solver, iters=iters, use_kernel=use_kernel
         )
         out = procrustes_average_collective(
-            v, axis_name=data_axis, n_iter=n_iter
+            v, axis_name=data_axis, n_iter=n_iter, backend=backend
         )
         return out[None]  # keep a sharded leading axis; identical on every shard
 
-    n_shards = mesh.shape[data_axis]
     spec_in = P(data_axis, *(None,) * (samples.ndim - 1))
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             shard_fn, mesh=mesh, in_specs=spec_in,
             out_specs=P(data_axis, None, None), check_vma=False
         )
     )
     stacked = fn(samples)
-    del n_shards
     return stacked[0]
 
 
@@ -153,6 +180,7 @@ def distributed_pca_from_covs(
     n_iter: int = 1,
     solver: str = "eigh",
     iters: int = 30,
+    backend: str = "xla",
 ) -> jax.Array:
     """Same as ``distributed_pca`` but from pre-formed local matrices (m, d, d).
 
@@ -165,11 +193,13 @@ def distributed_pca_from_covs(
         # cov_shard: (m_local, d, d); m_local == 1 when m == mesh size.
         cov = jnp.mean(cov_shard, axis=0)
         v, _ = local_eigenbasis(cov, r, method=solver, iters=iters)
-        out = procrustes_average_collective(v, axis_name=data_axis, n_iter=n_iter)
+        out = procrustes_average_collective(
+            v, axis_name=data_axis, n_iter=n_iter, backend=backend
+        )
         return out[None]
 
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=P(data_axis, None, None),

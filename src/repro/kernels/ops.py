@@ -21,18 +21,35 @@ from repro.kernels import ref as _ref
 
 __all__ = [
     "on_tpu",
+    "resolve_backend",
+    "interpret_default",
     "gram",
     "batched_gram",
     "align_average",
     "attention",
 ]
 
+BACKENDS = ("xla", "pallas", "auto")
+
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _interpret_default() -> bool:
+def resolve_backend(backend: str) -> str:
+    """Resolve a ``backend=`` switch ("xla" | "pallas" | "auto") to a
+    concrete choice: "auto" picks the compiled Pallas kernels on TPU and the
+    pure-XLA oracle elsewhere (interpret mode is a correctness path, not a
+    performance one).  Explicit "pallas" is honoured on any backend."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "auto":
+        return "pallas" if on_tpu() else "xla"
+    return backend
+
+
+def interpret_default() -> bool:
+    """Pallas kernels compile only on TPU; everywhere else run interpreted."""
     return not on_tpu()
 
 
@@ -41,7 +58,7 @@ def gram(x: jax.Array, *, use_kernel: bool | None = None, **kw) -> jax.Array:
     if use_kernel is None:
         use_kernel = on_tpu()
     if use_kernel:
-        return _cov.gram(x, interpret=_interpret_default(), **kw)
+        return _cov.gram(x, interpret=interpret_default(), **kw)
     return _ref.gram(x)
 
 
@@ -51,7 +68,7 @@ def batched_gram(
     if use_kernel is None:
         use_kernel = on_tpu()
     if use_kernel:
-        return _pa.batched_gram(vs, ref, interpret=_interpret_default(), **kw)
+        return _pa.batched_gram(vs, ref, interpret=interpret_default(), **kw)
     return _ref.batched_gram(vs, ref)
 
 
@@ -61,7 +78,7 @@ def align_average(
     if use_kernel is None:
         use_kernel = on_tpu()
     if use_kernel:
-        return _pa.align_average(vs, zs, interpret=_interpret_default(), **kw)
+        return _pa.align_average(vs, zs, interpret=interpret_default(), **kw)
     return _ref.align_average(vs, zs)
 
 
@@ -82,7 +99,7 @@ def attention(
     if use_kernel:
         return _fa.flash_attention(
             q, k, v, causal=causal, window=window,
-            interpret=_interpret_default(), **kw,
+            interpret=interpret_default(), **kw,
         )
     return _ref.attention(
         q, k, v, causal=causal, window=window, probs_bf16=probs_bf16

@@ -12,6 +12,15 @@ each; both are implemented here with explicit BlockSpec tiling.  ``r`` is
 expected MXU-sub-tile (r <= 128): blocks keep the full r extent and tile d.
 
 VMEM budget per step (bk=2048, r=128, f32): 2*bk*r*4 = 2 MiB.
+
+These kernels are the ``backend="pallas"`` path of the public aggregation
+API — ``repro.core.eigenspace.procrustes_fix_average`` /
+``iterative_refinement`` and the ``repro.core.distributed`` collectives
+dispatch here (compiled on TPU, interpret mode elsewhere; "auto" resolves
+via ``repro.kernels.ops.resolve_backend``).  Both kernels accept ragged
+extents: d is padded to the block size and trimmed on the way out, and any
+m >= 1 / r >= 1 works (tests/test_kernels_ragged.py sweeps the degenerate
+shapes).
 """
 
 from __future__ import annotations

@@ -311,8 +311,16 @@ def _gb(x):
     return f"{x/2**30:.2f}GiB" if isinstance(x, (int, float)) and x else "n/a"
 
 
-def dryrun_paper_pca(*, multi_pod: bool = False, device_count=None, verbose=True):
-    """Dry-run the paper's own workload (distributed PCA, Algorithm 2)."""
+def dryrun_paper_pca(
+    *, multi_pod: bool = False, device_count=None, verbose=True,
+    backend: str = "xla",
+):
+    """Dry-run the paper's own workload (distributed PCA, Algorithm 2).
+
+    ``backend`` selects the aggregation path ("xla" | "pallas" | "auto");
+    the collective-bytes accounting shows the psum-vs-all-gather topology
+    trade directly.
+    """
     from repro.configs.paper_pca import CONFIG as pcfg
     from repro.core.distributed import distributed_pca
 
@@ -327,6 +335,7 @@ def dryrun_paper_pca(*, multi_pod: bool = False, device_count=None, verbose=True
         "shape": f"d{pcfg.d}_r{pcfg.r}_n{pcfg.n_per_shard}",
         "multi_pod": multi_pod,
         "kind": "eigen",
+        "backend": backend,
         "mesh": {"shape": list(mesh.shape.values()), "axes": list(mesh.axis_names)},
     }
     t0 = time.time()
@@ -335,6 +344,7 @@ def dryrun_paper_pca(*, multi_pod: bool = False, device_count=None, verbose=True
         return distributed_pca(
             samples, mesh, pcfg.r,
             n_iter=pcfg.n_iter, solver=pcfg.solver, iters=pcfg.solver_iters,
+            backend=backend,
         )
 
     lowered = jax.jit(job).lower(samples_like)
@@ -367,6 +377,9 @@ def main():
     ap.add_argument("--eigen", action="store_true",
                     help="train_step with eigen-compressed DP gradients")
     ap.add_argument("--paper-pca", action="store_true")
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas", "auto"],
+                    help="aggregation path for --paper-pca")
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--device-count", type=int, default=512,
                     help="reduced placeholder device count for CI smoke")
@@ -430,7 +443,8 @@ def main():
         path = os.path.join(args.out, tag + ".json")
         try:
             if arch == "paper-pca":
-                rec = dryrun_paper_pca(multi_pod=mp, device_count=args.device_count)
+                rec = dryrun_paper_pca(multi_pod=mp, device_count=args.device_count,
+                                       backend=args.backend)
             else:
                 rec = dryrun_cell(
                     arch, shape, multi_pod=mp, eigen=args.eigen,

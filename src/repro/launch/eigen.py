@@ -42,6 +42,7 @@ def run(
     iters: int = 40,
     seed: int = 0,
     mesh=None,
+    backend: str = "xla",
 ):
     mesh = mesh or make_host_mesh(model=1)
     m = mesh.shape["data"]
@@ -54,7 +55,8 @@ def run(
 
     t0 = time.perf_counter()
     v_dist = distributed_pca(
-        samples, mesh, r, n_iter=n_iter, solver=solver, iters=iters
+        samples, mesh, r, n_iter=n_iter, solver=solver, iters=iters,
+        backend=backend,
     )
     v_dist.block_until_ready()
     t_dist = time.perf_counter() - t0
@@ -68,6 +70,7 @@ def run(
         "n": n_per_shard,
         "d": d,
         "r": r,
+        "backend": backend,
         "dist_aligned": float(dist_2(v_dist, v1)),
         "dist_central": float(dist_2(v_cent, v1)),
         "dist_naive": float(dist_2(naive_average(vs), v1)),
@@ -84,10 +87,14 @@ def main():
     ap.add_argument("--n-per-shard", type=int, default=1024)
     ap.add_argument("--n-iter", type=int, default=2)
     ap.add_argument("--solver", default="subspace", choices=["subspace", "eigh"])
+    ap.add_argument("--backend", default="auto", choices=["xla", "pallas", "auto"],
+                    help="aggregation path: pure XLA, Pallas kernels, or "
+                         "auto (kernels on TPU)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
     _, stats = run(
-        args.d, args.r, args.n_per_shard, n_iter=args.n_iter, solver=args.solver
+        args.d, args.r, args.n_per_shard, n_iter=args.n_iter,
+        solver=args.solver, backend=args.backend,
     )
     for k, v in stats.items():
         print(f"{k}: {v}")

@@ -3,6 +3,10 @@
 ``make_production_mesh`` is a FUNCTION (never a module constant) so importing
 this module touches no jax device state — required because the dry-run must
 set XLA_FLAGS before the first device query.
+
+All meshes are built through ``repro.compat.make_mesh`` so axis types are
+requested as 'auto' on JAX versions that have the concept and omitted on
+versions that don't.
 """
 
 from __future__ import annotations
@@ -11,9 +15,7 @@ from typing import Optional, Tuple
 
 import jax
 
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -21,13 +23,13 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     or two pods (2 x 16 x 16 = 512 chips) with a leading 'pod' axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(
     shape: Tuple[int, ...], axes: Tuple[str, ...]
 ) -> jax.sharding.Mesh:
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(
@@ -46,7 +48,7 @@ def make_host_mesh(
             model = 1
     data = data or (n // model)
     assert data * model == n, (data, model, n)
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.distributed import procrustes_average_collective
 from repro.core.subspace import local_eigenbasis
 from repro.data.synthetic import truncated_second_moment
@@ -27,22 +28,25 @@ def distributed_spectral_init(
     n_iter: int = 10,
     solver: str = "eigh",
     iters: int = 40,
+    backend: str = "xla",
 ) -> jax.Array:
     """a: (N, d) design vectors, y: (N,) measurements, sharded over the mesh.
 
-    Returns the (d, r) Procrustes-averaged spectral initialiser X_0.
+    ``backend`` selects the aggregation path ("xla" | "pallas" | "auto",
+    see ``repro.core.distributed``).  Returns the (d, r) Procrustes-averaged
+    spectral initialiser X_0.
     """
 
     def shard_fn(a_s, y_s):
         d_n = truncated_second_moment(a_s, y_s)
         v, _ = local_eigenbasis(d_n, r, method=solver, iters=iters)
         out = procrustes_average_collective(
-            v, axis_name=data_axis, n_iter=n_iter
+            v, axis_name=data_axis, n_iter=n_iter, backend=backend
         )
         return out[None]
 
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(P(data_axis, None), P(data_axis)),

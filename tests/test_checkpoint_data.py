@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.checkpoint import (
     CheckpointManager,
     latest_step,
@@ -67,7 +68,7 @@ def test_elastic_restore_resharding(tmp_path):
     """Save replicated, restore with an explicit (1-device) sharding."""
     t = _tree()
     save_checkpoint(str(tmp_path), 3, t)
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     sh = jax.tree.map(
         lambda _: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()), t
     )

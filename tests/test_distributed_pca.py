@@ -12,6 +12,7 @@ import pytest
 
 from conftest import run_with_devices
 
+from repro.compat import make_mesh
 from repro.core import (
     distributed_pca,
     distributed_pca_from_covs,
@@ -24,9 +25,7 @@ from repro.data import synthetic as syn
 
 def test_single_device_mesh_identity():
     """On a 1-device mesh, distributed PCA == local PCA of the full data."""
-    mesh = jax.make_mesh(
-        (1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    mesh = make_mesh((1,), ("data",))
     key = jax.random.PRNGKey(0)
     tau = syn.spectrum_m1(48, 3, delta=0.2)
     _, u, factor = syn.covariance_from_spectrum(key, tau)
@@ -43,12 +42,12 @@ def test_eight_device_matches_serial():
     out = run_with_devices(
         """
         import jax, jax.numpy as jnp
+        from repro.compat import make_mesh
         from repro.core import (distributed_pca, empirical_covariance,
                                 local_bases, procrustes_fix_average,
                                 iterative_refinement)
         from repro.data import synthetic as syn
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         key = jax.random.PRNGKey(0)
         d, r, m, n = 96, 4, 8, 200
         tau = syn.spectrum_m1(d, r, delta=0.2)
@@ -63,6 +62,8 @@ def test_eight_device_matches_serial():
         v_d2 = distributed_pca(samples, mesh, r, n_iter=3)
         v_s2 = iterative_refinement(vs, n_iter=3)
         print("ERR2", float(jnp.linalg.norm(v_d2 - v_s2)))
+        v_p = distributed_pca(samples, mesh, r, n_iter=1, backend="pallas")
+        print("ERR3", float(jnp.linalg.norm(v_p - v_ser)))
         """
     )
     errs = {
@@ -72,6 +73,8 @@ def test_eight_device_matches_serial():
     }
     assert errs["ERR1"] < 1e-4
     assert errs["ERR2"] < 1e-4
+    # all-gather + Pallas-kernel topology == psum topology == serial reference
+    assert errs["ERR3"] < 1e-4
 
 
 @pytest.mark.slow
@@ -79,11 +82,11 @@ def test_from_covs_and_subspace_solver():
     out = run_with_devices(
         """
         import jax, jax.numpy as jnp
+        from repro.compat import make_mesh
         from repro.core import (distributed_pca_from_covs, empirical_covariance,
                                 local_bases, procrustes_fix_average, dist_2)
         from repro.data import synthetic as syn
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         key = jax.random.PRNGKey(0)
         d, r, m, n = 64, 4, 8, 300
         tau = syn.spectrum_m1(d, r, delta=0.2)

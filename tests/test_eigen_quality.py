@@ -36,11 +36,11 @@ def test_refresh_basis_rotation_invariance():
         """
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.core import dist_2
         from repro.optim.eigen_compress import (EigenCompressConfig,
                                                 refresh_basis, _local_basis)
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("data",))
         ecfg = EigenCompressConfig(rank=4, power_iters=8)
         d, n = 48, 32
         # shared low-rank signal + per-shard noise
@@ -57,8 +57,8 @@ def test_refresh_basis_rotation_invariance():
                     g[0], jnp.zeros((d, 4)), jnp.zeros((), jnp.bool_),
                     axis_name="data", cfg=ecfg, key=jax.random.PRNGKey(42))
                 return basis[None]
-            return jax.shard_map(f, mesh=mesh, in_specs=P("data"),
-                                 out_specs=P("data"), check_vma=False)(gs)
+            return shard_map(f, mesh=mesh, in_specs=P("data"),
+                             out_specs=P("data"), check_vma=False)(gs)
         b1 = job(gs)[0]
         print("DIST_TRUTH", float(dist_2(b1, u)))
         """,

@@ -1,0 +1,96 @@
+"""Differential tests: Pallas Procrustes kernels (interpret mode) vs. the
+``repro.kernels.ref`` oracles on the ragged shapes the sweep tests skip —
+block-misaligned d (d % bk != 0, exercising the pad path), tiny rank
+(r < 8), a single machine (m == 1), and bf16 inputs.
+
+No hypothesis dependency: plain parametrized sweeps so these always run.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import procrustes_align, ref
+
+TOL = {jnp.dtype(jnp.float32): 2e-4, jnp.dtype(jnp.bfloat16): 2e-1}
+
+
+def _stack(key, m, d, r, dtype=jnp.float32):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    vs = jax.random.normal(k1, (m, d, r), dtype=dtype)
+    rf = jax.random.normal(k2, (d, r), dtype=dtype)
+    return vs, rf
+
+
+# d % bk != 0 forces the pad-and-trim path in both kernels; r < 8 and m == 1
+# are the degenerate extents the shape sweeps in test_kernels.py never hit.
+RAGGED = [
+    # (m, d, r, bk)
+    (4, 200, 16, 128),   # d % bk = 72
+    (3, 205, 5, 64),     # d % bk = 13, r < 8
+    (1, 130, 3, 128),    # m == 1 and d % bk = 2
+    (2, 96, 1, 64),      # rank-1 (sign-fixing regime)
+    (5, 64, 7, 8),       # many tiny blocks, r < 8
+]
+
+
+@pytest.mark.parametrize("m,d,r,bk", RAGGED)
+def test_batched_gram_ragged(m, d, r, bk):
+    vs, rf = _stack(0, m, d, r)
+    got = procrustes_align.batched_gram(vs, rf, bk=bk, interpret=True)
+    want = ref.batched_gram(vs, rf)
+    assert got.shape == (m, r, r)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=2e-4 * d, rtol=1e-3
+    )
+
+
+@pytest.mark.parametrize("m,d,r,bd", RAGGED)
+def test_align_average_ragged(m, d, r, bd):
+    vs, _ = _stack(1, m, d, r)
+    zs = jax.random.normal(jax.random.PRNGKey(2), (m, r, r))
+    got = procrustes_align.align_average(vs, zs, bd=bd, interpret=True)
+    want = ref.align_average(vs, zs)
+    assert got.shape == (d, r)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=2e-4 * r * m, rtol=1e-3
+    )
+
+
+@pytest.mark.parametrize("m,d,r", [(3, 200, 8), (1, 129, 4)])
+def test_batched_gram_bf16(m, d, r):
+    vs, rf = _stack(3, m, d, r, dtype=jnp.bfloat16)
+    got = procrustes_align.batched_gram(vs, rf, bk=128, interpret=True)
+    want = ref.batched_gram(vs, rf)
+    assert got.dtype == jnp.float32  # f32 accumulation contract
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want),
+        atol=TOL[jnp.dtype(jnp.bfloat16)] * d, rtol=1e-2,
+    )
+
+
+@pytest.mark.parametrize("m,d,r", [(3, 200, 8), (1, 129, 4)])
+def test_align_average_bf16(m, d, r):
+    vs, _ = _stack(4, m, d, r, dtype=jnp.bfloat16)
+    zs = jax.random.normal(jax.random.PRNGKey(5), (m, r, r), dtype=jnp.bfloat16)
+    got = procrustes_align.align_average(vs, zs, bd=128, interpret=True)
+    want = ref.align_average(vs, zs)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want),
+        atol=TOL[jnp.dtype(jnp.bfloat16)] * r * m, rtol=1e-2,
+    )
+
+
+def test_block_size_invariance_ragged():
+    """The same ragged problem must give the same answer for every tiling."""
+    vs, rf = _stack(6, 3, 205, 5)
+    outs = [
+        procrustes_align.batched_gram(vs, rf, bk=bk, interpret=True)
+        for bk in (8, 64, 205, 2048)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(
+            np.asarray(outs[0]), np.asarray(o), atol=1e-4, rtol=1e-5
+        )

@@ -94,12 +94,12 @@ def test_collective_bytes_real_module():
         """
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.launch.hlo_analysis import collective_bytes
-        mesh = jax.make_mesh((4,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("d",))
         def f(x):
             return jax.lax.psum(x, "d")
-        fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P()))
+        fn = jax.jit(shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P()))
         c = fn.lower(jax.ShapeDtypeStruct((64, 128), jnp.float32)).compile()
         cb = collective_bytes(c.as_text())
         print("AR", cb["all-reduce"])
