@@ -1,0 +1,279 @@
+"""Aggregation-path benchmark: the repo's recorded perf trajectory.
+
+Sweeps (m, d, r) x backend ("xla" | "pallas") x polar ("svd" |
+"newton-schulz") x topology ("stacked" | "collective") through the public
+aggregation API and writes ``BENCH_aggregate.json`` — a schema
+``benchmarks/run.py`` can pretty-print (``--show-aggregate``) and diff
+across PRs (``--diff-aggregate old new``), so every PR leaves a comparable
+datapoint.
+
+Topologies:
+
+  * "stacked"    — the coordinator form: ``iterative_refinement`` on a
+                   host-stacked (m, d, r) array (what the paper's
+                   coordinator runs; exercises the Pallas kernels directly).
+  * "collective" — ``procrustes_average_collective`` under ``shard_map``
+                   over the host mesh's data axis (the production topology;
+                   recorded only when more than one device is visible,
+                   since a 1-device mesh measures nothing distributed).
+
+Timing discipline: jit + one warm-up call (compile time recorded
+separately), then ``reps`` timed calls each ending in
+``block_until_ready``; the record carries the median and spread.  Off-TPU,
+``backend="pallas"`` runs the kernels in interpret mode — a correctness
+path whose wall time is not comparable to compiled numbers — so each
+record carries ``mode: "compiled" | "interpret"`` and the differ refuses to
+compare across modes.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_aggregate \
+          [--tiny] [--out BENCH_aggregate.json] [--reps 5] [--n-iter 2]
+          [--backends xla,pallas] [--polars svd,newton-schulz]
+          [--shapes 8x1024x16,16x2048x32]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+SCHEMA = "bench_aggregate/v1"
+
+# Record keys that identify a configuration (the diff join key).
+KEY_FIELDS = ("topology", "backend", "polar", "m", "d", "r", "n_iter")
+
+DEFAULT_SHAPES = ((8, 1024, 16), (16, 2048, 32), (8, 4096, 64))
+TINY_SHAPES = ((4, 128, 4), (2, 96, 8))
+
+
+def _parse_shapes(spec: str):
+    out = []
+    for cell in spec.split(","):
+        m, d, r = (int(x) for x in cell.lower().split("x"))
+        out.append((m, d, r))
+    return tuple(out)
+
+
+def _stack(m: int, d: int, r: int) -> jax.Array:
+    key = jax.random.PRNGKey(m * 1_000_003 + d * 1_003 + r)
+    return jnp.linalg.qr(jax.random.normal(key, (m, d, r)))[0]
+
+
+def _time_fn(fn, arg, reps: int) -> Dict[str, float]:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(arg))
+    compile_s = time.perf_counter() - t0
+    walls = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(arg))
+        walls.append((time.perf_counter() - t0) * 1e6)
+    return {
+        "compile_s": compile_s,
+        "wall_us": statistics.median(walls),
+        "wall_us_min": min(walls),
+        "wall_us_max": max(walls),
+        "reps": reps,
+    }
+
+
+def _mode(backend: str) -> str:
+    from repro.kernels.ops import on_tpu
+
+    if backend != "pallas":
+        return "compiled"
+    return "compiled" if on_tpu() else "interpret"
+
+
+def bench_stacked(shapes, backends, polars, *, n_iter: int, reps: int):
+    from repro.core import iterative_refinement
+
+    records = []
+    for m, d, r in shapes:
+        vs = _stack(m, d, r)
+        for backend in backends:
+            for polar in polars:
+                fn = jax.jit(
+                    lambda v, b=backend, p=polar: iterative_refinement(
+                        v, n_iter, backend=b, polar=p
+                    )
+                )
+                rec = {
+                    "topology": "stacked", "backend": backend, "polar": polar,
+                    "m": m, "d": d, "r": r, "n_iter": n_iter,
+                    "mode": _mode(backend),
+                }
+                rec.update(_time_fn(fn, vs, reps))
+                records.append(rec)
+                print(
+                    f"stacked m={m} d={d} r={r} {backend}/{polar} "
+                    f"[{rec['mode']}]: {rec['wall_us']:.1f}us "
+                    f"(compile {rec['compile_s']:.2f}s)"
+                )
+    return records
+
+
+def bench_collective(shapes, backends, polars, *, n_iter: int, reps: int):
+    """The shard_map topology over the host devices (m := device count)."""
+    from repro.compat import make_mesh, shard_map
+    from repro.core.distributed import procrustes_average_collective
+    from jax.sharding import PartitionSpec as P
+
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        return []
+    mesh = make_mesh((n_dev,), ("data",))
+    records = []
+    for _, d, r in shapes:
+        vs = _stack(n_dev, d, r)
+        for backend in backends:
+            for polar in polars:
+
+                def shard_fn(v, b=backend, p=polar):
+                    out = procrustes_average_collective(
+                        v[0], axis_name="data", n_iter=n_iter,
+                        backend=b, polar=p,
+                    )
+                    return out[None]
+
+                fn = jax.jit(
+                    shard_map(
+                        shard_fn, mesh=mesh, in_specs=P("data", None, None),
+                        out_specs=P("data", None, None), check_vma=False,
+                    )
+                )
+                rec = {
+                    "topology": "collective", "backend": backend,
+                    "polar": polar, "m": n_dev, "d": d, "r": r,
+                    "n_iter": n_iter, "mode": _mode(backend),
+                }
+                rec.update(_time_fn(fn, vs, reps))
+                records.append(rec)
+                print(
+                    f"collective m={n_dev} d={d} r={r} {backend}/{polar} "
+                    f"[{rec['mode']}]: {rec['wall_us']:.1f}us"
+                )
+    return records
+
+
+def run_sweep(
+    *, shapes=DEFAULT_SHAPES, backends=("xla", "pallas"),
+    polars=("svd", "newton-schulz"), n_iter: int = 2, reps: int = 5,
+) -> dict:
+    records = bench_stacked(shapes, backends, polars, n_iter=n_iter, reps=reps)
+    records += bench_collective(shapes, backends, polars, n_iter=n_iter, reps=reps)
+    return {
+        "schema": SCHEMA,
+        "meta": {
+            "jax": jax.__version__,
+            "platform": jax.default_backend(),
+            "device_count": len(jax.devices()),
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        },
+        "records": records,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Loading / pretty-printing / diffing (used by ``benchmarks.run``).
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(
+            f"{path}: expected schema {SCHEMA!r}, got {doc.get('schema')!r}"
+        )
+    return doc
+
+
+def _key(rec: dict):
+    return tuple(rec[k] for k in KEY_FIELDS)
+
+
+def pretty_print(doc: dict) -> None:
+    meta = doc.get("meta", {})
+    print(
+        f"# {SCHEMA} | jax {meta.get('jax')} on {meta.get('platform')} "
+        f"x{meta.get('device_count')} | {meta.get('timestamp')}"
+    )
+    hdr = ("topology", "backend", "polar", "m", "d", "r", "n_iter",
+           "mode", "wall_us", "compile_s")
+    print(",".join(hdr))
+    for rec in sorted(doc["records"], key=_key):
+        print(
+            f"{rec['topology']},{rec['backend']},{rec['polar']},"
+            f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
+            f"{rec['mode']},{rec['wall_us']:.1f},{rec['compile_s']:.2f}"
+        )
+
+
+def diff(old: dict, new: dict) -> None:
+    """Per-configuration wall-time ratio new/old; the PR-over-PR record.
+
+    Refuses cross-platform and cross-mode comparisons: a CPU sweep against
+    a TPU sweep (or interpret against compiled) is not a perf trajectory.
+    """
+    p_old = old.get("meta", {}).get("platform")
+    p_new = new.get("meta", {}).get("platform")
+    if p_old != p_new:
+        raise ValueError(
+            f"refusing to diff sweeps from different platforms "
+            f"({p_old!r} vs {p_new!r}); wall times are not comparable"
+        )
+    olds = {_key(r): r for r in old["records"]}
+    print("topology,backend,polar,m,d,r,n_iter,old_us,new_us,ratio")
+    for rec in sorted(new["records"], key=_key):
+        prev = olds.get(_key(rec))
+        if prev is None:
+            status = "NEW"
+        elif prev.get("mode") != rec.get("mode"):
+            status = f"MODE {prev.get('mode')}->{rec.get('mode')}"
+        else:
+            status = f"{rec['wall_us'] / max(prev['wall_us'], 1e-9):.3f}"
+        old_us = f"{prev['wall_us']:.1f}" if prev else "-"
+        print(
+            f"{rec['topology']},{rec['backend']},{rec['polar']},"
+            f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
+            f"{old_us},{rec['wall_us']:.1f},{status}"
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_aggregate.json")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shapes (seconds, works in interpret mode)")
+    ap.add_argument("--shapes", default=None,
+                    help="comma-separated MxDxR cells, e.g. 8x1024x16,16x2048x32")
+    ap.add_argument("--backends", default="xla,pallas")
+    ap.add_argument("--polars", default="svd,newton-schulz")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--n-iter", type=int, default=2)
+    args = ap.parse_args()
+
+    shapes = (
+        _parse_shapes(args.shapes) if args.shapes
+        else (TINY_SHAPES if args.tiny else DEFAULT_SHAPES)
+    )
+    doc = run_sweep(
+        shapes=shapes,
+        backends=tuple(args.backends.split(",")),
+        polars=tuple(args.polars.split(",")),
+        n_iter=args.n_iter,
+        reps=args.reps,
+    )
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {len(doc['records'])} records -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

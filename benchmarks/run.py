@@ -2,6 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+
+The recorded aggregation sweep (``benchmarks/bench_aggregate.py`` ->
+``BENCH_aggregate.json``) is loaded from here too:
+
+  python -m benchmarks.run --show-aggregate [BENCH_aggregate.json]
+  python -m benchmarks.run --diff-aggregate OLD.json NEW.json
 """
 
 import argparse
@@ -12,7 +18,22 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="skip the slower sweeps")
+    ap.add_argument("--show-aggregate", nargs="?", const="BENCH_aggregate.json",
+                    default=None, metavar="JSON",
+                    help="pretty-print a recorded bench_aggregate sweep and exit")
+    ap.add_argument("--diff-aggregate", nargs=2, default=None,
+                    metavar=("OLD", "NEW"),
+                    help="diff two bench_aggregate sweeps (PR-over-PR) and exit")
     args, _ = ap.parse_known_args()
+
+    if args.show_aggregate or args.diff_aggregate:
+        from benchmarks import bench_aggregate as A
+
+        if args.show_aggregate:
+            A.pretty_print(A.load(args.show_aggregate))
+        else:
+            A.diff(A.load(args.diff_aggregate[0]), A.load(args.diff_aggregate[1]))
+        return
 
     from benchmarks import bench_comm as C
     from benchmarks import bench_figs as F

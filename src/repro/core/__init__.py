@@ -4,6 +4,8 @@ estimation via Procrustes fixing (Charisopoulos, Benson & Damle)."""
 from repro.core.procrustes import (  # noqa: F401
     align,
     align_batch,
+    newton_schulz_polar,
+    polar_factor,
     procrustes_distance,
     procrustes_rotation,
     sign_fix,
@@ -22,6 +24,7 @@ from repro.core.eigenspace import (  # noqa: F401
     procrustes_fix_average,
     projector_average,
     qr_orthonormalize,
+    refinement_rounds,
 )
 from repro.core.covariance import empirical_covariance  # noqa: F401
 from repro.core.distributed import (  # noqa: F401

@@ -3,6 +3,10 @@
 ``empirical_covariance`` is the local hot spot of distributed PCA (a rank-n
 Gram update).  The Pallas TPU kernel lives in ``repro.kernels.covariance``;
 this module is the pure-XLA path and the single switch point between them.
+The switch is the same ``backend=`` vocabulary as the aggregation API
+("xla" | "pallas" | "auto"), so ``backend="pallas"`` covers the full
+distributed-PCA pipeline: covariance -> local eigenbasis -> gather -> fused
+align.
 """
 
 from __future__ import annotations
@@ -13,20 +17,19 @@ import jax.numpy as jnp
 __all__ = ["empirical_covariance"]
 
 
-def empirical_covariance(
-    x: jax.Array, *, use_kernel: bool = False, interpret: bool = False
-) -> jax.Array:
+def empirical_covariance(x: jax.Array, *, backend: str = "xla") -> jax.Array:
     """(1/n) X^T X for samples X of shape (n, d), accumulated in f32.
 
     Args:
       x: (n, d) sample matrix (zero-mean assumed, per the paper).
-      use_kernel: route through the Pallas Gram kernel (TPU target;
-        ``interpret=True`` executes it on CPU for validation).
+      backend: "xla" (pure jnp), "pallas" (the ``repro.kernels.covariance``
+        Gram kernel — compiled on TPU, interpret mode elsewhere), or "auto"
+        (kernel on TPU, XLA elsewhere).
     """
-    n = x.shape[0]
-    if use_kernel:
-        from repro.kernels import covariance as _cov_kernel
+    from repro.kernels import ops as kops
 
-        return _cov_kernel.gram(x, interpret=interpret) / n
+    n = x.shape[0]
+    if kops.resolve_backend(backend) == "pallas":
+        return kops.gram(x, use_kernel=True) / n
     xf = x.astype(jnp.float32)
     return (xf.T @ xf) / n

@@ -12,14 +12,18 @@ coordinator gather for m > 2, with bit-identical output to the serial
 reference (``repro.core.eigenspace``), which the tests assert.
 
 Backend dispatch: every aggregation entry point takes ``backend=``
-("xla" | "pallas" | "auto").  "xla" keeps the psum topology above.
-"pallas" switches to the paper's coordinator topology — one all-gather of
-the m local bases per shard, then the stacked Algorithm 1/2 with its Gram
-and apply stages routed through the ``repro.kernels.procrustes_align``
-Pallas kernels (compiled on TPU, interpret mode elsewhere); refinement
-rounds then cost no further communication.  "auto" resolves to "pallas" on
-TPU and "xla" elsewhere.  Both topologies compute the same estimator (the
-tests assert parity).
+("xla" | "pallas" | "auto") and ``polar=`` ("svd" | "newton-schulz").
+"xla" keeps the psum topology above.  "pallas" switches to the paper's
+coordinator topology — one all-gather of the m local bases per shard, then
+the stacked Algorithm 1/2 with its Gram and apply stages routed through the
+``repro.kernels.procrustes_align`` Pallas kernels (compiled on TPU,
+interpret mode elsewhere); refinement rounds then cost no further
+communication, and with ``polar="newton-schulz"`` the r x r polar factor is
+fused into the Gram kernel so each round is SVD-free.  ``backend="pallas"``
+also routes each shard's local covariance through the
+``repro.kernels.covariance`` Gram kernel, covering the full pipeline.
+"auto" resolves to "pallas" on TPU and "xla" elsewhere.  All combinations
+compute the same estimator (the tests assert parity).
 
 All collective functions here are written to be called *inside*
 ``shard_map`` with a named mesh axis; the ``distributed_pca`` driver wraps
@@ -39,7 +43,11 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import procrustes
 from repro.core.covariance import empirical_covariance
-from repro.core.eigenspace import procrustes_fix_average, qr_orthonormalize
+from repro.core.eigenspace import (
+    procrustes_fix_average,
+    qr_orthonormalize,
+    refinement_rounds,
+)
 from repro.core.subspace import local_eigenbasis
 from repro.kernels.ops import resolve_backend
 
@@ -73,6 +81,7 @@ def procrustes_average_collective(
     n_iter: int = 1,
     ref: jax.Array | None = None,
     backend: str = "xla",
+    polar: str = "svd",
 ) -> jax.Array:
     """Algorithm 1 (n_iter=1) / Algorithm 2 (n_iter>1) across a mesh axis.
 
@@ -87,23 +96,24 @@ def procrustes_average_collective(
         shard 0's solution as in the paper.
       backend: "xla" (psum topology), "pallas" (all-gather + kernel-backed
         stacked aggregation), or "auto".
+      polar: "svd" | "newton-schulz" polar factor (see
+        ``repro.core.eigenspace``).
 
     Returns the replicated (d, r) Procrustes-fixed average.
     """
     if resolve_backend(backend) == "pallas":
         # Coordinator topology, replicated on every shard: gather the m
-        # local bases once, then run the kernel-dispatched stacked path.
+        # local bases once, then run the kernel-dispatched stacked rounds
+        # (the loop itself lives in ``eigenspace.refinement_rounds``).
         vs = jax.lax.all_gather(v_local, axis_name)  # (m, d, r)
-        if ref is None:
-            ref = vs[0]
-        for _ in range(max(n_iter, 1)):
-            ref = procrustes_fix_average(vs, ref, backend="pallas")
-        return ref
+        return refinement_rounds(
+            vs, ref, n_iter=n_iter, backend="pallas", polar=polar
+        )
     m = axis_size(axis_name)
     if ref is None:
         ref = broadcast_from(v_local, axis_name, src=0)
     for _ in range(max(n_iter, 1)):
-        aligned = procrustes.align(v_local, ref)
+        aligned = procrustes.align(v_local, ref, polar=polar)
         vbar = jax.lax.psum(aligned, axis_name) / m
         ref = qr_orthonormalize(vbar)
     return ref
@@ -124,9 +134,9 @@ def _local_pca_basis(
     *,
     solver: str,
     iters: int,
-    use_kernel: bool,
+    backend: str,
 ) -> jax.Array:
-    cov = empirical_covariance(x_shard, use_kernel=use_kernel)
+    cov = empirical_covariance(x_shard, backend=backend)
     v, _ = local_eigenbasis(cov, r, method=solver, iters=iters)
     return v
 
@@ -140,23 +150,25 @@ def distributed_pca(
     n_iter: int = 1,
     solver: str = "eigh",
     iters: int = 30,
-    use_kernel: bool = False,
     backend: str = "xla",
+    polar: str = "svd",
 ) -> jax.Array:
     """End-to-end one-shot distributed PCA on a mesh.
 
     ``samples`` (N, d) are sharded along the leading axis over ``data_axis``;
     each shard forms its local covariance, local top-r basis, and the mesh
-    runs the Procrustes-fixed average.  ``backend`` selects the aggregation
-    path (see module docstring).  Returns the (d, r) estimate.
+    runs the Procrustes-fixed average.  ``backend`` selects the whole
+    pipeline's path — ``"pallas"`` kernels both the shard-local covariance
+    stage and the aggregation (see module docstring) — and ``polar`` the
+    rotation method.  Returns the (d, r) estimate.
     """
 
     def shard_fn(x_shard: jax.Array) -> jax.Array:
         v = _local_pca_basis(
-            x_shard, r, solver=solver, iters=iters, use_kernel=use_kernel
+            x_shard, r, solver=solver, iters=iters, backend=backend
         )
         out = procrustes_average_collective(
-            v, axis_name=data_axis, n_iter=n_iter, backend=backend
+            v, axis_name=data_axis, n_iter=n_iter, backend=backend, polar=polar
         )
         return out[None]  # keep a sharded leading axis; identical on every shard
 
@@ -181,6 +193,7 @@ def distributed_pca_from_covs(
     solver: str = "eigh",
     iters: int = 30,
     backend: str = "xla",
+    polar: str = "svd",
 ) -> jax.Array:
     """Same as ``distributed_pca`` but from pre-formed local matrices (m, d, d).
 
@@ -194,7 +207,7 @@ def distributed_pca_from_covs(
         cov = jnp.mean(cov_shard, axis=0)
         v, _ = local_eigenbasis(cov, r, method=solver, iters=iters)
         out = procrustes_average_collective(
-            v, axis_name=data_axis, n_iter=n_iter, backend=backend
+            v, axis_name=data_axis, n_iter=n_iter, backend=backend, polar=polar
         )
         return out[None]
 

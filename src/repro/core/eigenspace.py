@@ -10,11 +10,22 @@ benchmarks run.
 All functions take local solutions as a stacked array ``vs`` of shape
 (m, d, r) — machine-major — and are jit-friendly.
 
-The aggregation hot path takes a ``backend=`` switch ("xla" | "pallas" |
-"auto"): "pallas" streams the bandwidth-bound Gram and apply stages through
-the ``repro.kernels.procrustes_align`` Pallas kernels (compiled on TPU,
-interpret mode elsewhere) while the tiny r x r SVD stays in XLA; "auto"
-picks the kernels on TPU and the pure-XLA path elsewhere.
+The aggregation hot path takes two switches:
+
+  * ``backend=`` ("xla" | "pallas" | "auto"): "pallas" streams the
+    bandwidth-bound Gram and apply stages through the
+    ``repro.kernels.procrustes_align`` Pallas kernels (compiled on TPU,
+    interpret mode elsewhere); "auto" picks the kernels on TPU and the
+    pure-XLA path elsewhere.
+  * ``polar=`` ("svd" | "newton-schulz"): how the r x r orthogonal polar
+    factor is computed.  "svd" is the paper's closed form; on the pallas
+    backend it is the one stage that still round-trips through XLA.
+    "newton-schulz" is matmul-only; on the pallas backend it is fused into
+    the Gram kernel, making the whole round SVD-free (two kernel launches,
+    no XLA compute between them).
+
+All four combinations compute the same estimator (the differential tests
+assert parity); "pallas" accumulates in f32.
 """
 
 from __future__ import annotations
@@ -32,6 +43,7 @@ __all__ = [
     "qr_orthonormalize",
     "naive_average",
     "procrustes_fix_average",
+    "refinement_rounds",
     "iterative_refinement",
     "projector_average",
     "central_estimate",
@@ -62,19 +74,33 @@ def naive_average(vs: jax.Array) -> jax.Array:
     return qr_orthonormalize(jnp.mean(vs, axis=0))
 
 
-def _procrustes_fix_average_pallas(vs: jax.Array, ref: jax.Array) -> jax.Array:
-    """Kernel-dispatched Algorithm 1 body: Pallas Gram + apply stages, XLA SVD."""
+def _procrustes_fix_average_pallas(
+    vs: jax.Array, ref: jax.Array, polar: str
+) -> jax.Array:
+    """Kernel-dispatched Algorithm 1 body.
+
+    ``polar="newton-schulz"``: fused Gram+polar kernel -> apply kernel; the
+    r x r stage never leaves VMEM and no XLA compute runs between launches.
+    ``polar="svd"``: Gram kernel -> XLA r x r SVD -> apply kernel.
+    """
     from repro.kernels import ops as kops
 
-    g = kops.batched_gram(vs, ref, use_kernel=True)  # (m, r, r) f32
-    u, _, wt = jnp.linalg.svd(g, full_matrices=False)  # r x r: stays in XLA
-    z = u @ wt
+    if polar == "newton-schulz":
+        z = kops.batched_gram_polar(vs, ref, use_kernel=True)  # (m, r, r) f32
+    else:
+        g = kops.batched_gram(vs, ref, use_kernel=True)  # (m, r, r) f32
+        u, _, wt = jnp.linalg.svd(g, full_matrices=False)  # r x r: stays in XLA
+        z = u @ wt
     vbar = kops.align_average(vs, z, use_kernel=True)  # (d, r) f32
     return qr_orthonormalize(vbar).astype(vs.dtype)
 
 
 def procrustes_fix_average(
-    vs: jax.Array, ref: jax.Array | None = None, *, backend: str = "xla"
+    vs: jax.Array,
+    ref: jax.Array | None = None,
+    *,
+    backend: str = "xla",
+    polar: str = "svd",
 ) -> jax.Array:
     """Algorithm 1: Procrustes-fix every local basis to ``ref``, average, QR.
 
@@ -82,33 +108,53 @@ def procrustes_fix_average(
       vs:  (m, d, r) stacked local solutions.
       ref: (d, r) reference solution; defaults to ``vs[0]`` per the paper.
       backend: "xla" (pure jnp), "pallas" (kernel Gram/apply stages), or
-        "auto" (kernels on TPU, XLA elsewhere).  Both backends compute the
-        same function; "pallas" accumulates in f32.
+        "auto" (kernels on TPU, XLA elsewhere).
+      polar: "svd" (closed-form rotation) or "newton-schulz" (matmul-only;
+        fused in-kernel on the pallas backend).  See the module docstring.
     """
     from repro.kernels.ops import resolve_backend
 
+    procrustes.resolve_polar(polar)
     if ref is None:
         ref = vs[0]
     if resolve_backend(backend) == "pallas":
-        return _procrustes_fix_average_pallas(vs, ref)
-    aligned = procrustes.align_batch(vs, ref)
+        return _procrustes_fix_average_pallas(vs, ref, polar)
+    aligned = procrustes.align_batch(vs, ref, polar=polar)
     return qr_orthonormalize(jnp.mean(aligned, axis=0))
 
 
-@functools.partial(jax.jit, static_argnames=("n_iter", "backend"))
+def refinement_rounds(
+    vs: jax.Array,
+    ref: jax.Array | None = None,
+    *,
+    n_iter: int = 1,
+    backend: str = "xla",
+    polar: str = "svd",
+) -> jax.Array:
+    """Algorithm 2's round loop over an already-stacked (m, d, r) ``vs``:
+    run Algorithm 1 ``n_iter`` times, re-using each output as the next
+    reference.  The single home of the refinement logic — both
+    ``iterative_refinement`` and the pallas-topology branch of
+    ``repro.core.distributed.procrustes_average_collective`` call this.
+    """
+    if ref is None:
+        ref = vs[0]
+    for _ in range(max(n_iter, 1)):
+        ref = procrustes_fix_average(vs, ref, backend=backend, polar=polar)
+    return ref
+
+
+@functools.partial(jax.jit, static_argnames=("n_iter", "backend", "polar"))
 def iterative_refinement(
-    vs: jax.Array, n_iter: int = 2, *, backend: str = "xla"
+    vs: jax.Array, n_iter: int = 2, *, backend: str = "xla", polar: str = "svd"
 ) -> jax.Array:
     """Algorithm 2: repeat Algorithm 1, re-using the output as the reference.
 
     ``n_iter=1`` is exactly Algorithm 1 with the default reference.
-    ``backend`` is threaded through every round's aggregation (see
-    ``procrustes_fix_average``).
+    ``backend`` / ``polar`` are threaded through every round's aggregation
+    (see ``procrustes_fix_average``).
     """
-    ref = vs[0]
-    for _ in range(max(n_iter, 1)):
-        ref = procrustes_fix_average(vs, ref, backend=backend)
-    return ref
+    return refinement_rounds(vs, n_iter=n_iter, backend=backend, polar=polar)
 
 
 def projector_average(vs: jax.Array, r: int) -> jax.Array:

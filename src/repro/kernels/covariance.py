@@ -90,8 +90,11 @@ def gram(
         out_shape=jax.ShapeDtypeStruct((dp, dp), jnp.float32),
         interpret=interpret,
     )(x, x)
+    out = out[:d, :d]
     if symmetric:
-        # Mirror the strictly-upper block triangle into the lower one.
-        iu = jnp.triu(jnp.ones((dp, dp), dtype=bool), k=0)
-        out = jnp.where(iu, out, out.T)
-    return out[:d, :d]
+        # Mirror the strictly-upper triangle into the (uncomputed, zero)
+        # lower one.  Mask-free: two triangular selects XLA fuses in place,
+        # instead of materialising a dense (dp, dp) bool mask.  Trimming
+        # first keeps the mirror O(d^2) rather than O(dp^2).
+        out = jnp.triu(out) + jnp.triu(out, k=1).T
+    return out

@@ -5,6 +5,12 @@ On TPU the kernels run compiled (Mosaic); on CPU they run via the Pallas
 interpreter when ``use_kernel`` is requested (correctness path), and default
 to the pure-XLA oracle otherwise (performance path for CI).  The dry-run
 lowers the XLA path so ``cost_analysis()`` is well-defined — see DESIGN.md §7.
+
+Every linear-algebra entry point here shares one dispatch rule
+(``_dispatch``): ``use_kernel=None`` resolves to "kernel on TPU, oracle
+elsewhere", an explicit ``True`` forces the kernel (interpret mode off-TPU),
+and ``False`` forces the oracle.  ``attention`` keeps its own rule (decode
+steps stay in XLA even on TPU).
 """
 
 from __future__ import annotations
@@ -25,6 +31,7 @@ __all__ = [
     "interpret_default",
     "gram",
     "batched_gram",
+    "batched_gram_polar",
     "align_average",
     "attention",
 ]
@@ -53,33 +60,41 @@ def interpret_default() -> bool:
     return not on_tpu()
 
 
-def gram(x: jax.Array, *, use_kernel: bool | None = None, **kw) -> jax.Array:
-    """X^T X (f32). Kernel on TPU, interpret-mode kernel if forced on CPU."""
+def _dispatch(kernel_fn, oracle_fn, use_kernel: bool | None, *args, **kw):
+    """Shared kernel/oracle dispatch: ``None`` -> kernel iff on TPU."""
     if use_kernel is None:
         use_kernel = on_tpu()
     if use_kernel:
-        return _cov.gram(x, interpret=interpret_default(), **kw)
-    return _ref.gram(x)
+        return kernel_fn(*args, interpret=interpret_default(), **kw)
+    return oracle_fn(*args, **kw)
+
+
+def gram(x: jax.Array, *, use_kernel: bool | None = None, **kw) -> jax.Array:
+    """X^T X (f32). Kernel on TPU, interpret-mode kernel if forced on CPU."""
+    return _dispatch(_cov.gram, _ref.gram, use_kernel, x, **kw)
 
 
 def batched_gram(
     vs: jax.Array, ref: jax.Array, *, use_kernel: bool | None = None, **kw
 ) -> jax.Array:
-    if use_kernel is None:
-        use_kernel = on_tpu()
-    if use_kernel:
-        return _pa.batched_gram(vs, ref, interpret=interpret_default(), **kw)
-    return _ref.batched_gram(vs, ref)
+    return _dispatch(_pa.batched_gram, _ref.batched_gram, use_kernel, vs, ref, **kw)
+
+
+def batched_gram_polar(
+    vs: jax.Array, ref: jax.Array, *, use_kernel: bool | None = None, **kw
+) -> jax.Array:
+    """Fused Gram + Newton–Schulz polar: Z_i = polar(V_i^T @ ref), (m, r, r)."""
+    return _dispatch(
+        _pa.batched_gram_polar, _ref.batched_gram_polar, use_kernel, vs, ref, **kw
+    )
 
 
 def align_average(
     vs: jax.Array, zs: jax.Array, *, use_kernel: bool | None = None, **kw
 ) -> jax.Array:
-    if use_kernel is None:
-        use_kernel = on_tpu()
-    if use_kernel:
-        return _pa.align_average(vs, zs, interpret=interpret_default(), **kw)
-    return _ref.align_average(vs, zs)
+    return _dispatch(
+        _pa.align_average, _ref.align_average, use_kernel, vs, zs, **kw
+    )
 
 
 def attention(

@@ -3,21 +3,45 @@
 Algorithm 1's coordinator work splits into three stages:
 
   1. Gram stage   G_i = V_i^T @ V_ref           (m tall-skinny matmuls)
-  2. tiny SVDs    Z_i = U_i W_i^T from svd(G_i) (r x r; stays in XLA —
-                  latency-bound, no MXU win; a deliberate non-kernel)
+  2. polar stage  Z_i = polar(G_i)              (r x r orthogonal factor)
   3. Apply stage  V_bar = (1/m) sum_i V_i @ Z_i (m rank-r updates)
 
 Stages 1 and 3 stream the (m, d, r) stack of local bases through VMEM once
 each; both are implemented here with explicit BlockSpec tiling.  ``r`` is
 expected MXU-sub-tile (r <= 128): blocks keep the full r extent and tile d.
 
-VMEM budget per step (bk=2048, r=128, f32): 2*bk*r*4 = 2 MiB.
+The polar stage has two homes:
+
+  * ``batched_gram`` emits the raw Gram stack and the host graph computes
+    ``Z_i = U_i W_i^T`` from an XLA SVD (latency-bound, no MXU win — the
+    ``polar="svd"`` path, three dispatches per round).
+  * ``batched_gram_polar`` fuses a Newton–Schulz polar iteration into the
+    final d-step of each machine's sequential Gram accumulation: the r x r
+    tile never leaves VMEM, the kernel emits Z_i directly, and the whole
+    round is two kernel launches with no XLA compute in between (the
+    ``polar="newton-schulz"`` path).  Each Newton–Schulz step is two r x r
+    MXU matmuls; the XLA reference lives in
+    ``repro.core.procrustes.newton_schulz_polar``.
+
+VMEM budget per Gram-stage step (bk=2048, r=128, f32):
+  v block + ref block         2 * bk*r*4  = 2.0 MiB
+  out tile (G_i / Z_i)            r*r*4   = 64 KiB
+  NS temporaries (X^T X, 3I)  2 * r*r*4   = 128 KiB
+i.e. the fusion adds <200 KiB to the 2 MiB streaming budget — far under
+the 16 MiB/core VMEM envelope, so ``bk`` need not shrink.
+
+Newton–Schulz iteration count: ``ns_iters`` defaults to 24
+(``repro.core.procrustes.DEFAULT_NS_ITERS``), sized as
+``log_1.5(||G||_F / sigma_min(G)) + ~5`` — enough for cond(G)*sqrt(r) up
+to ~1e3.  Aggregation Grams are near-orthogonal (G ~ I + noise) and need
+only ~8 steps; raise ``ns_iters`` only for nearly rank-deficient stacks
+(e.g. adversarially misaligned bases with tiny principal cosines).
 
 These kernels are the ``backend="pallas"`` path of the public aggregation
 API — ``repro.core.eigenspace.procrustes_fix_average`` /
 ``iterative_refinement`` and the ``repro.core.distributed`` collectives
 dispatch here (compiled on TPU, interpret mode elsewhere; "auto" resolves
-via ``repro.kernels.ops.resolve_backend``).  Both kernels accept ragged
+via ``repro.kernels.ops.resolve_backend``).  All kernels accept ragged
 extents: d is padded to the block size and trimmed on the way out, and any
 m >= 1 / r >= 1 works (tests/test_kernels_ragged.py sweeps the degenerate
 shapes).
@@ -31,7 +55,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["batched_gram", "align_average"]
+__all__ = ["batched_gram", "batched_gram_polar", "align_average"]
+
+# Keep in sync with repro.core.procrustes.DEFAULT_NS_ITERS (not imported to
+# keep the kernel package free of core dependencies).
+_DEFAULT_NS_ITERS = 24
+
+
+def _gram_accumulate(v, ref, out):
+    out[...] += jnp.dot(
+        v[0].T.astype(jnp.float32),
+        ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )[None]
 
 
 def _batched_gram_kernel(v, ref, out):
@@ -41,11 +77,53 @@ def _batched_gram_kernel(v, ref, out):
     def _init():
         out[...] = jnp.zeros_like(out)
 
-    out[...] += jnp.dot(
-        v[0].T.astype(jnp.float32),
-        ref[...].astype(jnp.float32),
-        preferred_element_type=jnp.float32,
-    )[None]
+    _gram_accumulate(v, ref, out)
+
+
+def _batched_gram_polar_kernel(v, ref, out, *, nk: int, ns_iters: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out[...] = jnp.zeros_like(out)
+
+    _gram_accumulate(v, ref, out)
+
+    @pl.when(k == nk - 1)
+    def _polar():
+        # The Gram tile is complete; run Newton–Schulz on it in VMEM and
+        # emit the orthogonal polar factor Z_i in place of G_i.
+        g = out[0]
+        norm = jnp.sqrt(jnp.sum(g * g))
+        x = g / jnp.maximum(norm, 1e-30)
+        eye3 = 3.0 * jnp.eye(g.shape[-1], dtype=jnp.float32)
+        for _ in range(ns_iters):
+            xtx = jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+            x = 0.5 * jnp.dot(x, eye3 - xtx, preferred_element_type=jnp.float32)
+        out[...] = x[None]
+
+
+def _gram_stage_call(kernel, vs, ref, *, bk, interpret):
+    """Shared (m, d/bk) grid launch for the Gram-stage kernels."""
+    m, d, r = vs.shape
+    bk = min(bk, max(8, d))
+    d_pad = (-d) % bk
+    if d_pad:
+        vs = jnp.pad(vs, ((0, 0), (0, d_pad), (0, 0)))
+        ref = jnp.pad(ref, ((0, d_pad), (0, 0)))
+    dp = vs.shape[1]
+    grid = (m, dp // bk)
+    return pl.pallas_call(
+        kernel(nk=dp // bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bk, r), lambda i, k: (i, k, 0)),
+            pl.BlockSpec((bk, r), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r, r), lambda i, k: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, r, r), jnp.float32),
+        interpret=interpret,
+    )(vs, ref)
 
 
 @functools.partial(jax.jit, static_argnames=("bk", "interpret"))
@@ -57,25 +135,34 @@ def batched_gram(
     Returns (m, r, r) f32.  Grid: (m, d/bk); the d-loop is the sequential
     (minor) dimension, accumulating each machine's Gram tile in VMEM.
     """
-    m, d, r = vs.shape
-    bk = min(bk, max(8, d))
-    d_pad = (-d) % bk
-    if d_pad:
-        vs = jnp.pad(vs, ((0, 0), (0, d_pad), (0, 0)))
-        ref = jnp.pad(ref, ((0, d_pad), (0, 0)))
-    dp = vs.shape[1]
-    grid = (m, dp // bk)
-    return pl.pallas_call(
-        _batched_gram_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bk, r), lambda i, k: (i, k, 0)),
-            pl.BlockSpec((bk, r), lambda i, k: (k, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, r, r), lambda i, k: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, r, r), jnp.float32),
-        interpret=interpret,
-    )(vs, ref)
+    return _gram_stage_call(
+        lambda nk: _batched_gram_kernel, vs, ref, bk=bk, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "ns_iters", "interpret"))
+def batched_gram_polar(
+    vs: jax.Array,
+    ref: jax.Array,
+    *,
+    bk: int = 2048,
+    ns_iters: int = _DEFAULT_NS_ITERS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused Gram + Newton–Schulz polar: Z_i = polar(V_i^T @ ref).
+
+    Same tiling as ``batched_gram``; the final d-step of each machine's
+    sequential accumulation runs ``ns_iters`` Newton–Schulz steps on the
+    in-VMEM r x r tile and writes the orthogonal factor directly, so the
+    SVD-free pipeline is two kernels total (this + ``align_average``).
+    Returns (m, r, r) f32.
+    """
+    return _gram_stage_call(
+        lambda nk: functools.partial(
+            _batched_gram_polar_kernel, nk=nk, ns_iters=ns_iters
+        ),
+        vs, ref, bk=bk, interpret=interpret,
+    )
 
 
 def _align_average_kernel(v, z, out, *, m: int):

@@ -9,7 +9,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gram", "batched_gram", "align_average", "attention"]
+__all__ = [
+    "gram",
+    "batched_gram",
+    "batched_gram_polar",
+    "align_average",
+    "attention",
+]
 
 
 def gram(x: jax.Array) -> jax.Array:
@@ -23,6 +29,19 @@ def batched_gram(vs: jax.Array, ref: jax.Array) -> jax.Array:
     return jnp.einsum(
         "mdr,ds->mrs", vs.astype(jnp.float32), ref.astype(jnp.float32)
     )
+
+
+def batched_gram_polar(
+    vs: jax.Array, ref: jax.Array, *, ns_iters: int | None = None
+) -> jax.Array:
+    """Z_i = polar(V_i^T @ ref) — oracle for the fused Gram+Newton–Schulz
+    kernel. vs: (m, d, r), ref: (d, r) -> (m, r, r) f32."""
+    # Function-level import: repro.core.distributed imports repro.kernels.ops
+    # at module scope, so a module-level core import here would be circular.
+    from repro.core.procrustes import DEFAULT_NS_ITERS, newton_schulz_polar
+
+    iters = DEFAULT_NS_ITERS if ns_iters is None else ns_iters
+    return newton_schulz_polar(batched_gram(vs, ref), iters=iters)
 
 
 def align_average(vs: jax.Array, zs: jax.Array) -> jax.Array:

@@ -313,13 +313,15 @@ def _gb(x):
 
 def dryrun_paper_pca(
     *, multi_pod: bool = False, device_count=None, verbose=True,
-    backend: str = "xla",
+    backend: str = "xla", polar: str = "svd",
 ):
     """Dry-run the paper's own workload (distributed PCA, Algorithm 2).
 
     ``backend`` selects the aggregation path ("xla" | "pallas" | "auto");
     the collective-bytes accounting shows the psum-vs-all-gather topology
-    trade directly.
+    trade directly.  ``polar`` selects the r x r rotation method
+    ("svd" | "newton-schulz"); with "newton-schulz" the lowered graph is
+    SVD-free, which the HLO accounting reflects.
     """
     from repro.configs.paper_pca import CONFIG as pcfg
     from repro.core.distributed import distributed_pca
@@ -336,6 +338,7 @@ def dryrun_paper_pca(
         "multi_pod": multi_pod,
         "kind": "eigen",
         "backend": backend,
+        "polar": polar,
         "mesh": {"shape": list(mesh.shape.values()), "axes": list(mesh.axis_names)},
     }
     t0 = time.time()
@@ -344,7 +347,7 @@ def dryrun_paper_pca(
         return distributed_pca(
             samples, mesh, pcfg.r,
             n_iter=pcfg.n_iter, solver=pcfg.solver, iters=pcfg.solver_iters,
-            backend=backend,
+            backend=backend, polar=polar,
         )
 
     lowered = jax.jit(job).lower(samples_like)
@@ -380,6 +383,9 @@ def main():
     ap.add_argument("--backend", default="xla",
                     choices=["xla", "pallas", "auto"],
                     help="aggregation path for --paper-pca")
+    ap.add_argument("--polar", default="svd",
+                    choices=["svd", "newton-schulz"],
+                    help="r x r polar factor for --paper-pca")
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--device-count", type=int, default=512,
                     help="reduced placeholder device count for CI smoke")
@@ -444,7 +450,7 @@ def main():
         try:
             if arch == "paper-pca":
                 rec = dryrun_paper_pca(multi_pod=mp, device_count=args.device_count,
-                                       backend=args.backend)
+                                       backend=args.backend, polar=args.polar)
             else:
                 rec = dryrun_cell(
                     arch, shape, multi_pod=mp, eigen=args.eigen,

@@ -43,6 +43,7 @@ def run(
     seed: int = 0,
     mesh=None,
     backend: str = "xla",
+    polar: str = "svd",
 ):
     mesh = mesh or make_host_mesh(model=1)
     m = mesh.shape["data"]
@@ -56,7 +57,7 @@ def run(
     t0 = time.perf_counter()
     v_dist = distributed_pca(
         samples, mesh, r, n_iter=n_iter, solver=solver, iters=iters,
-        backend=backend,
+        backend=backend, polar=polar,
     )
     v_dist.block_until_ready()
     t_dist = time.perf_counter() - t0
@@ -71,6 +72,7 @@ def run(
         "d": d,
         "r": r,
         "backend": backend,
+        "polar": polar,
         "dist_aligned": float(dist_2(v_dist, v1)),
         "dist_central": float(dist_2(v_cent, v1)),
         "dist_naive": float(dist_2(naive_average(vs), v1)),
@@ -90,11 +92,15 @@ def main():
     ap.add_argument("--backend", default="auto", choices=["xla", "pallas", "auto"],
                     help="aggregation path: pure XLA, Pallas kernels, or "
                          "auto (kernels on TPU)")
+    ap.add_argument("--polar", default="svd", choices=["svd", "newton-schulz"],
+                    help="r x r polar factor: closed-form SVD or the "
+                         "matmul-only Newton-Schulz iteration (fused "
+                         "in-kernel on the pallas backend)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
     _, stats = run(
         args.d, args.r, args.n_per_shard, n_iter=args.n_iter,
-        solver=args.solver, backend=args.backend,
+        solver=args.solver, backend=args.backend, polar=args.polar,
     )
     for k, v in stats.items():
         print(f"{k}: {v}")

@@ -29,11 +29,13 @@ def distributed_spectral_init(
     solver: str = "eigh",
     iters: int = 40,
     backend: str = "xla",
+    polar: str = "svd",
 ) -> jax.Array:
     """a: (N, d) design vectors, y: (N,) measurements, sharded over the mesh.
 
-    ``backend`` selects the aggregation path ("xla" | "pallas" | "auto",
-    see ``repro.core.distributed``).  Returns the (d, r) Procrustes-averaged
+    ``backend`` selects the aggregation path ("xla" | "pallas" | "auto") and
+    ``polar`` the rotation method ("svd" | "newton-schulz"), see
+    ``repro.core.distributed``.  Returns the (d, r) Procrustes-averaged
     spectral initialiser X_0.
     """
 
@@ -41,7 +43,7 @@ def distributed_spectral_init(
         d_n = truncated_second_moment(a_s, y_s)
         v, _ = local_eigenbasis(d_n, r, method=solver, iters=iters)
         out = procrustes_average_collective(
-            v, axis_name=data_axis, n_iter=n_iter, backend=backend
+            v, axis_name=data_axis, n_iter=n_iter, backend=backend, polar=polar
         )
         return out[None]
 

@@ -12,6 +12,11 @@
    must match ``backend="xla"`` within 1e-5 through the public API,
    including on ragged, non-MXU-aligned shapes.
 
+3. Polar parity: every (backend, polar) cell of the dispatch matrix —
+   {xla, pallas} x {svd, newton-schulz} — computes the same estimator as
+   the (xla, svd) reference cell (the fused-NS cell is the SVD-free
+   single-pipeline path).
+
 Parametrized over seeds rather than hypothesis so the property sweep runs
 even without the 'test' extra installed.
 """
@@ -100,6 +105,32 @@ def test_backend_parity_iterative_refinement():
     a = iterative_refinement(vs, n_iter=3, backend="xla")
     b = iterative_refinement(vs, n_iter=3, backend="pallas")
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("polar", ["svd", "newton-schulz"])
+@pytest.mark.parametrize("m,d,r", [(3, 205, 5), (2, 2100, 5)])
+def test_backend_polar_matrix_parity(backend, polar, m, d, r):
+    """Every (backend, polar) cell matches the (xla, svd) reference on
+    ragged shapes through the public API."""
+    vs = _orthonormal_stack(42, m, d, r)
+    a = procrustes_fix_average(vs, backend="xla", polar="svd")
+    b = procrustes_fix_average(vs, backend=backend, polar=polar)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_polar_parity_iterative_refinement(backend):
+    vs = _orthonormal_stack(11, 4, 130, 4)
+    a = iterative_refinement(vs, n_iter=3, backend="xla", polar="svd")
+    b = iterative_refinement(vs, n_iter=3, backend=backend, polar="newton-schulz")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_polar_invalid_raises():
+    vs = _orthonormal_stack(0, 2, 16, 2)
+    with pytest.raises(ValueError):
+        procrustes_fix_average(vs, polar="cholesky")
 
 
 def test_auto_backend_resolves():

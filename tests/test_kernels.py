@@ -179,10 +179,10 @@ def test_ops_dispatch_cpu():
     )
 
 
-def test_empirical_covariance_kernel_flag():
+def test_empirical_covariance_backend_switch():
     from repro.core import empirical_covariance
 
     x = jax.random.normal(jax.random.PRNGKey(4), (100, 60))
     a = empirical_covariance(x)
-    b = empirical_covariance(x, use_kernel=True, interpret=True)
+    b = empirical_covariance(x, backend="pallas")  # interpret mode on CPU
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)

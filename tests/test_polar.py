@@ -1,0 +1,187 @@
+"""Differential test suite for the polar-factor switch (SVD vs Newton–Schulz).
+
+Covers the acceptance claims of the SVD-free aggregation path:
+
+  * NS == SVD polar factor on well-conditioned, clustered-spectrum, and
+    near-rank-deficient Gram matrices (elementwise and as subspaces).
+  * Convergence: error vs iteration count is driven to f32 roundoff within
+    the default budget, and more iterations never hurt.
+  * The fused Pallas kernel (``batched_gram_polar``) matches its XLA oracle
+    and emits orthogonal factors.
+  * ``backend="pallas", polar="newton-schulz"`` lowers with **no SVD** in
+    the jaxpr of ``procrustes_fix_average`` (the single-pipeline claim),
+    while the ``polar="svd"`` path still contains one (positive control).
+  * Subspace agreement between the SVD and NS aggregation paths is <= 1e-5,
+    measured in f64 (the f32 ``dist_2`` bottoms out at ~sqrt(f32 eps)).
+
+Interpret-mode lanes run everywhere; the compiled-TPU lanes are the same
+assertions without ``interpret`` and are skipped off-TPU.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import procrustes_fix_average
+from repro.core.procrustes import (
+    DEFAULT_NS_ITERS,
+    newton_schulz_polar,
+    polar_factor,
+)
+from repro.kernels import procrustes_align, ref
+from repro.kernels.ops import on_tpu
+
+
+def _svd_polar(g):
+    u, _, wt = np.linalg.svd(np.asarray(g, np.float64), full_matrices=False)
+    return u @ wt
+
+
+def _gram_with_spectrum(seed, s):
+    """G = U diag(s) W^T with random orthogonal U, W (f32)."""
+    r = len(s)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    u = jnp.linalg.qr(jax.random.normal(k1, (r, r)))[0]
+    w = jnp.linalg.qr(jax.random.normal(k2, (r, r)))[0]
+    return (u * jnp.asarray(s, jnp.float32)) @ w.T
+
+
+def _subspace_dist64(a, b):
+    """sin of the largest principal angle, computed in f64 so agreement
+    below the f32 ``dist_2`` floor (~3.5e-4) is measurable."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    a, _ = np.linalg.qr(a)
+    b, _ = np.linalg.qr(b)
+    c = np.clip(np.linalg.svd(a.T @ b, compute_uv=False), 0.0, 1.0)
+    return float(np.sqrt(max(1.0 - c.min() ** 2, 0.0)))
+
+
+WELL_CONDITIONED = [1.0, 0.9, 0.7, 0.5, 0.3]
+CLUSTERED = [1.0, 1.0 - 1e-3, 1.0 - 2e-3, 0.5, 0.5 - 1e-3]
+NEAR_DEFICIENT = [1.0, 0.8, 0.5, 0.1, 5e-3]
+
+
+@pytest.mark.parametrize(
+    "spectrum", [WELL_CONDITIONED, CLUSTERED, NEAR_DEFICIENT],
+    ids=["well", "clustered", "near-deficient"],
+)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_ns_matches_svd_polar(spectrum, seed):
+    g = _gram_with_spectrum(seed, spectrum)
+    z_ns = newton_schulz_polar(g)
+    np.testing.assert_allclose(
+        np.asarray(z_ns), _svd_polar(g), atol=2e-5
+    )
+    # Orthogonality to f32 roundoff.
+    np.testing.assert_allclose(
+        np.asarray(z_ns.T @ z_ns), np.eye(len(spectrum)), atol=1e-5
+    )
+
+
+def test_polar_factor_dispatch_and_batching():
+    gs = jnp.stack([_gram_with_spectrum(s, WELL_CONDITIONED) for s in range(4)])
+    a = polar_factor(gs, polar="svd")
+    b = polar_factor(gs, polar="newton-schulz")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+    with pytest.raises(ValueError):
+        polar_factor(gs[0], polar="qr")
+
+
+def test_ns_rank1_is_sign_fix():
+    g = jnp.asarray([[-0.3]])
+    np.testing.assert_allclose(
+        np.asarray(newton_schulz_polar(g)), [[-1.0]], atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("spectrum,needed", [
+    (WELL_CONDITIONED, 12),
+    (NEAR_DEFICIENT, DEFAULT_NS_ITERS),
+], ids=["well", "near-deficient"])
+def test_ns_convergence_iteration_sweep(spectrum, needed):
+    """Error vs iteration count reaches f32 roundoff within the default
+    budget; harder spectra need more steps (the sizing rule's premise)."""
+    g = _gram_with_spectrum(3, spectrum)
+    target = _svd_polar(g)
+    errs = {
+        it: float(np.abs(np.asarray(newton_schulz_polar(g, iters=it)) - target).max())
+        for it in (2, 6, 12, DEFAULT_NS_ITERS, 40)
+    }
+    assert errs[needed] < 2e-5, errs
+    assert errs[40] < 2e-5, errs  # extra iterations never diverge
+    assert errs[2] > errs[needed]  # the sweep is actually converging
+
+
+def test_fused_kernel_matches_oracle_interpret():
+    m, d, r = 5, 300, 8
+    vs = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(0), (m, d, r)))[0]
+    zk = procrustes_align.batched_gram_polar(vs, vs[0], interpret=True)
+    zo = ref.batched_gram_polar(vs, vs[0])
+    np.testing.assert_allclose(np.asarray(zk), np.asarray(zo), atol=1e-6)
+    eye = np.eye(r)
+    for z in np.asarray(zk):
+        np.testing.assert_allclose(z.T @ z, eye, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,d,r", [(3, 205, 5), (1, 130, 3), (2, 2100, 5)])
+def test_fused_kernel_ragged_shapes(m, d, r):
+    """Pad/trim path of the fused kernel on non-block-aligned extents."""
+    vs = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(m + d), (m, d, r)))[0]
+    zk = procrustes_align.batched_gram_polar(vs, vs[0], interpret=True)
+    zo = ref.batched_gram_polar(vs, vs[0])
+    np.testing.assert_allclose(np.asarray(zk), np.asarray(zo), atol=1e-6)
+
+
+def test_fused_kernel_iteration_sweep():
+    """ns_iters threads through the kernel: few iters != converged, and the
+    kernel tracks the XLA reference at every iteration count."""
+    vs = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(7), (3, 96, 6)))[0]
+    g = ref.batched_gram(vs, vs[0])
+    for it in (2, 8, 24):
+        zk = procrustes_align.batched_gram_polar(
+            vs, vs[0], ns_iters=it, interpret=True
+        )
+        zo = newton_schulz_polar(g, iters=it)
+        np.testing.assert_allclose(np.asarray(zk), np.asarray(zo), atol=1e-6)
+
+
+@pytest.mark.parametrize("m,d,r", [(4, 205, 5), (3, 96, 4)])
+def test_aggregation_ns_vs_svd_subspace(m, d, r):
+    """Acceptance: the NS aggregation path matches the SVD path to <= 1e-5
+    subspace distance, on both backends (pallas = interpret mode off-TPU)."""
+    vs = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(m * d), (m, d, r)))[0]
+    baseline = procrustes_fix_average(vs, backend="xla", polar="svd")
+    for backend in ("xla", "pallas"):
+        got = procrustes_fix_average(vs, backend=backend, polar="newton-schulz")
+        assert _subspace_dist64(baseline, got) <= 1e-5
+
+
+def test_pallas_ns_jaxpr_is_svd_free():
+    """Acceptance: backend="pallas", polar="newton-schulz" lowers
+    ``procrustes_fix_average`` with no SVD anywhere in the jaxpr."""
+    vs = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(0), (3, 64, 4)))[0]
+
+    def ns(v):
+        return procrustes_fix_average(v, backend="pallas", polar="newton-schulz")
+
+    def svd(v):
+        return procrustes_fix_average(v, backend="pallas", polar="svd")
+
+    assert "svd" not in str(jax.make_jaxpr(ns)(vs))
+    # Positive control: the assertion has teeth.
+    assert "svd" in str(jax.make_jaxpr(svd)(vs))
+
+
+@pytest.mark.skipif(not on_tpu(), reason="compiled-TPU lane")
+def test_fused_kernel_compiled_tpu():
+    """Same differential claims, compiled by Mosaic instead of interpreted."""
+    m, d, r = 8, 4096, 64
+    vs = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(0), (m, d, r)))[0]
+    zk = procrustes_align.batched_gram_polar(vs, vs[0], interpret=False)
+    zo = ref.batched_gram_polar(vs, vs[0])
+    np.testing.assert_allclose(np.asarray(zk), np.asarray(zo), atol=1e-4)
+    baseline = procrustes_fix_average(vs, backend="xla", polar="svd")
+    got = procrustes_fix_average(vs, backend="pallas", polar="newton-schulz")
+    assert _subspace_dist64(baseline, got) <= 1e-5
