@@ -1,11 +1,15 @@
 """Aggregation-path benchmark: the repo's recorded perf trajectory.
 
 Sweeps (m, d, r) x backend ("xla" | "pallas") x polar ("svd" |
-"newton-schulz") x topology ("stacked" | "collective") through the public
-aggregation API and writes ``BENCH_aggregate.json`` — a schema
-``benchmarks/run.py`` can pretty-print (``--show-aggregate``) and diff
-across PRs (``--diff-aggregate old new``), so every PR leaves a comparable
-datapoint.
+"newton-schulz") x orth ("qr" | "cholesky-qr2") x topology ("stacked" |
+"collective") through the public aggregation API and writes
+``BENCH_aggregate.json`` — a schema ``benchmarks/run.py`` can pretty-print
+(``--show-aggregate``), diff across PRs (``--diff-aggregate old new``), and
+gate (``--check-aggregate old new``: >25% machine-calibrated same-mode
+median slowdown on any matching cell fails; see ``check``), so every PR
+leaves a comparable datapoint.  The
+(pallas, newton-schulz, cholesky-qr2) cells are the fused single-launch
+rounds.
 
 Topologies:
 
@@ -15,7 +19,10 @@ Topologies:
   * "collective" — ``procrustes_average_collective`` under ``shard_map``
                    over the host mesh's data axis (the production topology;
                    recorded only when more than one device is visible,
-                   since a 1-device mesh measures nothing distributed).
+                   since a 1-device mesh measures nothing distributed —
+                   run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+                   to record it on a 1-CPU host, as the CI bench-smoke
+                   lane does).
 
 Timing discipline: jit + one warm-up call (compile time recorded
 separately), then ``reps`` timed calls each ending in
@@ -28,7 +35,7 @@ compare across modes.
 Run:  PYTHONPATH=src python -m benchmarks.bench_aggregate \
           [--tiny] [--out BENCH_aggregate.json] [--reps 5] [--n-iter 2]
           [--backends xla,pallas] [--polars svd,newton-schulz]
-          [--shapes 8x1024x16,16x2048x32]
+          [--orths qr,cholesky-qr2] [--shapes 8x1024x16,16x2048x32]
 """
 
 from __future__ import annotations
@@ -42,10 +49,12 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
-SCHEMA = "bench_aggregate/v1"
+SCHEMA = "bench_aggregate/v2"
+# v1 predates the ``orth=`` switch; ``load`` upgrades it (orth="qr").
+SCHEMA_V1 = "bench_aggregate/v1"
 
-# Record keys that identify a configuration (the diff join key).
-KEY_FIELDS = ("topology", "backend", "polar", "m", "d", "r", "n_iter")
+# Record keys that identify a configuration (the diff/check join key).
+KEY_FIELDS = ("topology", "backend", "polar", "orth", "m", "d", "r", "n_iter")
 
 DEFAULT_SHAPES = ((8, 1024, 16), (16, 2048, 32), (8, 4096, 64))
 TINY_SHAPES = ((4, 128, 4), (2, 96, 8))
@@ -90,7 +99,7 @@ def _mode(backend: str) -> str:
     return "compiled" if on_tpu() else "interpret"
 
 
-def bench_stacked(shapes, backends, polars, *, n_iter: int, reps: int):
+def bench_stacked(shapes, backends, polars, orths, *, n_iter: int, reps: int):
     from repro.core import iterative_refinement
 
     records = []
@@ -98,27 +107,30 @@ def bench_stacked(shapes, backends, polars, *, n_iter: int, reps: int):
         vs = _stack(m, d, r)
         for backend in backends:
             for polar in polars:
-                fn = jax.jit(
-                    lambda v, b=backend, p=polar: iterative_refinement(
-                        v, n_iter, backend=b, polar=p
+                for orth in orths:
+                    fn = jax.jit(
+                        lambda v, b=backend, p=polar, o=orth:
+                        iterative_refinement(
+                            v, n_iter, backend=b, polar=p, orth=o
+                        )
                     )
-                )
-                rec = {
-                    "topology": "stacked", "backend": backend, "polar": polar,
-                    "m": m, "d": d, "r": r, "n_iter": n_iter,
-                    "mode": _mode(backend),
-                }
-                rec.update(_time_fn(fn, vs, reps))
-                records.append(rec)
-                print(
-                    f"stacked m={m} d={d} r={r} {backend}/{polar} "
-                    f"[{rec['mode']}]: {rec['wall_us']:.1f}us "
-                    f"(compile {rec['compile_s']:.2f}s)"
-                )
+                    rec = {
+                        "topology": "stacked", "backend": backend,
+                        "polar": polar, "orth": orth,
+                        "m": m, "d": d, "r": r, "n_iter": n_iter,
+                        "mode": _mode(backend),
+                    }
+                    rec.update(_time_fn(fn, vs, reps))
+                    records.append(rec)
+                    print(
+                        f"stacked m={m} d={d} r={r} {backend}/{polar}/{orth} "
+                        f"[{rec['mode']}]: {rec['wall_us']:.1f}us "
+                        f"(compile {rec['compile_s']:.2f}s)"
+                    )
     return records
 
 
-def bench_collective(shapes, backends, polars, *, n_iter: int, reps: int):
+def bench_collective(shapes, backends, polars, orths, *, n_iter: int, reps: int):
     """The shard_map topology over the host devices (m := device count)."""
     from repro.compat import make_mesh, shard_map
     from repro.core.distributed import procrustes_average_collective
@@ -126,6 +138,8 @@ def bench_collective(shapes, backends, polars, *, n_iter: int, reps: int):
 
     n_dev = len(jax.devices())
     if n_dev < 2:
+        print("# collective topology skipped: single-device host "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
         return []
     mesh = make_mesh((n_dev,), ("data",))
     records = []
@@ -133,40 +147,49 @@ def bench_collective(shapes, backends, polars, *, n_iter: int, reps: int):
         vs = _stack(n_dev, d, r)
         for backend in backends:
             for polar in polars:
+                for orth in orths:
 
-                def shard_fn(v, b=backend, p=polar):
-                    out = procrustes_average_collective(
-                        v[0], axis_name="data", n_iter=n_iter,
-                        backend=b, polar=p,
-                    )
-                    return out[None]
+                    def shard_fn(v, b=backend, p=polar, o=orth):
+                        out = procrustes_average_collective(
+                            v[0], axis_name="data", n_iter=n_iter,
+                            backend=b, polar=p, orth=o,
+                        )
+                        return out[None]
 
-                fn = jax.jit(
-                    shard_map(
-                        shard_fn, mesh=mesh, in_specs=P("data", None, None),
-                        out_specs=P("data", None, None), check_vma=False,
+                    fn = jax.jit(
+                        shard_map(
+                            shard_fn, mesh=mesh,
+                            in_specs=P("data", None, None),
+                            out_specs=P("data", None, None), check_vma=False,
+                        )
                     )
-                )
-                rec = {
-                    "topology": "collective", "backend": backend,
-                    "polar": polar, "m": n_dev, "d": d, "r": r,
-                    "n_iter": n_iter, "mode": _mode(backend),
-                }
-                rec.update(_time_fn(fn, vs, reps))
-                records.append(rec)
-                print(
-                    f"collective m={n_dev} d={d} r={r} {backend}/{polar} "
-                    f"[{rec['mode']}]: {rec['wall_us']:.1f}us"
-                )
+                    rec = {
+                        "topology": "collective", "backend": backend,
+                        "polar": polar, "orth": orth, "m": n_dev,
+                        "d": d, "r": r,
+                        "n_iter": n_iter, "mode": _mode(backend),
+                    }
+                    rec.update(_time_fn(fn, vs, reps))
+                    records.append(rec)
+                    print(
+                        f"collective m={n_dev} d={d} r={r} "
+                        f"{backend}/{polar}/{orth} "
+                        f"[{rec['mode']}]: {rec['wall_us']:.1f}us"
+                    )
     return records
 
 
 def run_sweep(
     *, shapes=DEFAULT_SHAPES, backends=("xla", "pallas"),
-    polars=("svd", "newton-schulz"), n_iter: int = 2, reps: int = 5,
+    polars=("svd", "newton-schulz"), orths=("qr", "cholesky-qr2"),
+    n_iter: int = 2, reps: int = 5,
 ) -> dict:
-    records = bench_stacked(shapes, backends, polars, n_iter=n_iter, reps=reps)
-    records += bench_collective(shapes, backends, polars, n_iter=n_iter, reps=reps)
+    records = bench_stacked(
+        shapes, backends, polars, orths, n_iter=n_iter, reps=reps
+    )
+    records += bench_collective(
+        shapes, backends, polars, orths, n_iter=n_iter, reps=reps
+    )
     return {
         "schema": SCHEMA,
         "meta": {
@@ -186,6 +209,11 @@ def run_sweep(
 def load(path: str) -> dict:
     with open(path) as f:
         doc = json.load(f)
+    if doc.get("schema") == SCHEMA_V1:
+        # v1 predates the ``orth=`` switch; every v1 record ran thin QR.
+        for rec in doc.get("records", []):
+            rec.setdefault("orth", "qr")
+        doc["schema"] = SCHEMA
     if doc.get("schema") != SCHEMA:
         raise ValueError(
             f"{path}: expected schema {SCHEMA!r}, got {doc.get('schema')!r}"
@@ -203,12 +231,13 @@ def pretty_print(doc: dict) -> None:
         f"# {SCHEMA} | jax {meta.get('jax')} on {meta.get('platform')} "
         f"x{meta.get('device_count')} | {meta.get('timestamp')}"
     )
-    hdr = ("topology", "backend", "polar", "m", "d", "r", "n_iter",
+    hdr = ("topology", "backend", "polar", "orth", "m", "d", "r", "n_iter",
            "mode", "wall_us", "compile_s")
     print(",".join(hdr))
     for rec in sorted(doc["records"], key=_key):
         print(
             f"{rec['topology']},{rec['backend']},{rec['polar']},"
+            f"{rec['orth']},"
             f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
             f"{rec['mode']},{rec['wall_us']:.1f},{rec['compile_s']:.2f}"
         )
@@ -228,7 +257,7 @@ def diff(old: dict, new: dict) -> None:
             f"({p_old!r} vs {p_new!r}); wall times are not comparable"
         )
     olds = {_key(r): r for r in old["records"]}
-    print("topology,backend,polar,m,d,r,n_iter,old_us,new_us,ratio")
+    print("topology,backend,polar,orth,m,d,r,n_iter,old_us,new_us,ratio")
     for rec in sorted(new["records"], key=_key):
         prev = olds.get(_key(rec))
         if prev is None:
@@ -240,9 +269,63 @@ def diff(old: dict, new: dict) -> None:
         old_us = f"{prev['wall_us']:.1f}" if prev else "-"
         print(
             f"{rec['topology']},{rec['backend']},{rec['polar']},"
+            f"{rec['orth']},"
             f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
             f"{old_us},{rec['wall_us']:.1f},{status}"
         )
+
+
+def check(
+    old: dict, new: dict, *, threshold: float = 1.25, calibrate: bool = True
+) -> tuple:
+    """Same-mode regression gate: the PR-blocking form of ``diff``.
+
+    Joins matching-key cells whose recorded ``mode`` agrees
+    (compiled-vs-compiled or interpret-vs-interpret; a mode flip is a path
+    change, not a perf regression) and flags those whose new/old median
+    ratio exceeds ``threshold``.  Cross-platform sweeps are refused
+    outright, like ``diff``.
+
+    ``calibrate=True`` divides every cell's ratio by the *median* ratio
+    across the matched cells first.  The baseline is committed from
+    whatever machine recorded it, and CI runs on a different one — a
+    uniformly slower runner shifts every ratio by the same factor, which
+    is machine speed, not a regression.  Calibration cancels that factor
+    and keeps the gate sensitive to the signal that matters: one path
+    getting slower *relative to the others*.  The cost is deliberate:
+    a change that slows every single cell by the same factor is invisible
+    (run ``calibrate=False`` on same-machine sweeps to see it).
+
+    Returns ``(regressions, checked)``: the offending cells (each carrying
+    ``old_us``, raw ``ratio``, and ``cal_ratio``) and the number of cells
+    compared.  Empty list == gate green.
+    """
+    p_old = old.get("meta", {}).get("platform")
+    p_new = new.get("meta", {}).get("platform")
+    if p_old != p_new:
+        raise ValueError(
+            f"refusing to check sweeps from different platforms "
+            f"({p_old!r} vs {p_new!r}); wall times are not comparable"
+        )
+    olds = {_key(r): r for r in old["records"]}
+    matched = []
+    for rec in sorted(new["records"], key=_key):
+        prev = olds.get(_key(rec))
+        if prev is None or prev.get("mode") != rec.get("mode"):
+            continue
+        ratio = rec["wall_us"] / max(prev["wall_us"], 1e-9)
+        matched.append((rec, prev, ratio))
+    norm = (
+        statistics.median(r for _, _, r in matched)
+        if calibrate and len(matched) >= 2 else 1.0
+    )
+    regressions = [
+        {**rec, "old_us": prev["wall_us"], "ratio": ratio,
+         "cal_ratio": ratio / norm}
+        for rec, prev, ratio in matched
+        if ratio / norm > threshold
+    ]
+    return regressions, len(matched)
 
 
 def main() -> None:
@@ -254,6 +337,7 @@ def main() -> None:
                     help="comma-separated MxDxR cells, e.g. 8x1024x16,16x2048x32")
     ap.add_argument("--backends", default="xla,pallas")
     ap.add_argument("--polars", default="svd,newton-schulz")
+    ap.add_argument("--orths", default="qr,cholesky-qr2")
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--n-iter", type=int, default=2)
     args = ap.parse_args()
@@ -266,6 +350,7 @@ def main() -> None:
         shapes=shapes,
         backends=tuple(args.backends.split(",")),
         polars=tuple(args.polars.split(",")),
+        orths=tuple(args.orths.split(",")),
         n_iter=args.n_iter,
         reps=args.reps,
     )

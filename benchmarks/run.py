@@ -8,6 +8,11 @@ The recorded aggregation sweep (``benchmarks/bench_aggregate.py`` ->
 
   python -m benchmarks.run --show-aggregate [BENCH_aggregate.json]
   python -m benchmarks.run --diff-aggregate OLD.json NEW.json
+  python -m benchmarks.run --check-aggregate OLD.json NEW.json
+
+``--check-aggregate`` is the CI regression gate: it exits non-zero when any
+matching same-mode cell's median wall time regressed by more than
+``--check-threshold`` (default 1.25x).
 """
 
 import argparse
@@ -24,15 +29,39 @@ def main() -> None:
     ap.add_argument("--diff-aggregate", nargs=2, default=None,
                     metavar=("OLD", "NEW"),
                     help="diff two bench_aggregate sweeps (PR-over-PR) and exit")
+    ap.add_argument("--check-aggregate", nargs=2, default=None,
+                    metavar=("OLD", "NEW"),
+                    help="same-mode regression gate: exit 1 if any matching "
+                         "cell's median slowed down past the threshold")
+    ap.add_argument("--check-threshold", type=float, default=1.25,
+                    help="max allowed new/old median wall-time ratio for "
+                         "--check-aggregate (default 1.25)")
     args, _ = ap.parse_known_args()
 
-    if args.show_aggregate or args.diff_aggregate:
+    if args.show_aggregate or args.diff_aggregate or args.check_aggregate:
         from benchmarks import bench_aggregate as A
 
         if args.show_aggregate:
             A.pretty_print(A.load(args.show_aggregate))
-        else:
+        elif args.diff_aggregate:
             A.diff(A.load(args.diff_aggregate[0]), A.load(args.diff_aggregate[1]))
+        else:
+            old, new = map(A.load, args.check_aggregate)
+            bad, checked = A.check(old, new, threshold=args.check_threshold)
+            if bad:
+                for r in bad:
+                    print(
+                        f"REGRESSION {r['topology']},{r['backend']},"
+                        f"{r['polar']},{r['orth']},m={r['m']},d={r['d']},"
+                        f"r={r['r']}: {r['old_us']:.1f}us -> "
+                        f"{r['wall_us']:.1f}us ({r['ratio']:.2f}x raw, "
+                        f"{r['cal_ratio']:.2f}x machine-calibrated)",
+                        file=sys.stderr,
+                    )
+                sys.exit(1)
+            print(f"# check-aggregate: {checked} matching cells, no "
+                  f"machine-calibrated regression past "
+                  f"{args.check_threshold:.2f}x")
         return
 
     from benchmarks import bench_comm as C

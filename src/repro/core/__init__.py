@@ -10,6 +10,11 @@ from repro.core.procrustes import (  # noqa: F401
     procrustes_rotation,
     sign_fix,
 )
+from repro.core.orthonorm import (  # noqa: F401
+    cholesky_qr2,
+    orthonormalize,
+    resolve_orth,
+)
 from repro.core.metrics import dist_2, dist_f, eigengap, intdim  # noqa: F401
 from repro.core.subspace import (  # noqa: F401
     local_eigenbasis,

@@ -12,14 +12,17 @@ coordinator gather for m > 2, with bit-identical output to the serial
 reference (``repro.core.eigenspace``), which the tests assert.
 
 Backend dispatch: every aggregation entry point takes ``backend=``
-("xla" | "pallas" | "auto") and ``polar=`` ("svd" | "newton-schulz").
-"xla" keeps the psum topology above.  "pallas" switches to the paper's
-coordinator topology — one all-gather of the m local bases per shard, then
-the stacked Algorithm 1/2 with its Gram and apply stages routed through the
-``repro.kernels.procrustes_align`` Pallas kernels (compiled on TPU,
+("xla" | "pallas" | "auto"), ``polar=`` ("svd" | "newton-schulz"), and
+``orth=`` ("qr" | "cholesky-qr2").  "xla" keeps the psum topology above.
+"pallas" switches to the paper's coordinator topology — one all-gather of
+the m local bases per shard, then the stacked Algorithm 1/2 routed through
+the ``repro.kernels.procrustes_align`` Pallas kernels (compiled on TPU,
 interpret mode elsewhere); refinement rounds then cost no further
-communication, and with ``polar="newton-schulz"`` the r x r polar factor is
-fused into the Gram kernel so each round is SVD-free.  ``backend="pallas"``
+communication.  With ``polar="newton-schulz"`` the r x r polar factor is
+fused into the Gram kernel (SVD-free rounds), and adding
+``orth="cholesky-qr2"`` folds the final orthonormalization in too, making
+each round a *single* kernel launch with no XLA compute at all (the
+fused-round dataflow is drawn in DESIGN.md §3.2).  ``backend="pallas"``
 also routes each shard's local covariance through the
 ``repro.kernels.covariance`` Gram kernel, covering the full pipeline.
 "auto" resolves to "pallas" on TPU and "xla" elsewhere.  All combinations
@@ -43,11 +46,8 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import procrustes
 from repro.core.covariance import empirical_covariance
-from repro.core.eigenspace import (
-    procrustes_fix_average,
-    qr_orthonormalize,
-    refinement_rounds,
-)
+from repro.core.eigenspace import refinement_rounds
+from repro.core.orthonorm import orthonormalize
 from repro.core.subspace import local_eigenbasis
 from repro.kernels.ops import resolve_backend
 
@@ -82,6 +82,7 @@ def procrustes_average_collective(
     ref: jax.Array | None = None,
     backend: str = "xla",
     polar: str = "svd",
+    orth: str = "qr",
 ) -> jax.Array:
     """Algorithm 1 (n_iter=1) / Algorithm 2 (n_iter>1) across a mesh axis.
 
@@ -98,6 +99,8 @@ def procrustes_average_collective(
         stacked aggregation), or "auto".
       polar: "svd" | "newton-schulz" polar factor (see
         ``repro.core.eigenspace``).
+      orth: "qr" | "cholesky-qr2" per-round orthonormalization (see
+        ``repro.core.orthonorm``).
 
     Returns the replicated (d, r) Procrustes-fixed average.
     """
@@ -107,7 +110,7 @@ def procrustes_average_collective(
         # (the loop itself lives in ``eigenspace.refinement_rounds``).
         vs = jax.lax.all_gather(v_local, axis_name)  # (m, d, r)
         return refinement_rounds(
-            vs, ref, n_iter=n_iter, backend="pallas", polar=polar
+            vs, ref, n_iter=n_iter, backend="pallas", polar=polar, orth=orth
         )
     m = axis_size(axis_name)
     if ref is None:
@@ -115,7 +118,7 @@ def procrustes_average_collective(
     for _ in range(max(n_iter, 1)):
         aligned = procrustes.align(v_local, ref, polar=polar)
         vbar = jax.lax.psum(aligned, axis_name) / m
-        ref = qr_orthonormalize(vbar)
+        ref = orthonormalize(vbar, orth=orth)
     return ref
 
 
@@ -152,6 +155,7 @@ def distributed_pca(
     iters: int = 30,
     backend: str = "xla",
     polar: str = "svd",
+    orth: str = "qr",
 ) -> jax.Array:
     """End-to-end one-shot distributed PCA on a mesh.
 
@@ -159,8 +163,9 @@ def distributed_pca(
     each shard forms its local covariance, local top-r basis, and the mesh
     runs the Procrustes-fixed average.  ``backend`` selects the whole
     pipeline's path — ``"pallas"`` kernels both the shard-local covariance
-    stage and the aggregation (see module docstring) — and ``polar`` the
-    rotation method.  Returns the (d, r) estimate.
+    stage and the aggregation (see module docstring) — ``polar`` the
+    rotation method, and ``orth`` the per-round orthonormalization.
+    Returns the (d, r) estimate.
     """
 
     def shard_fn(x_shard: jax.Array) -> jax.Array:
@@ -168,7 +173,8 @@ def distributed_pca(
             x_shard, r, solver=solver, iters=iters, backend=backend
         )
         out = procrustes_average_collective(
-            v, axis_name=data_axis, n_iter=n_iter, backend=backend, polar=polar
+            v, axis_name=data_axis, n_iter=n_iter,
+            backend=backend, polar=polar, orth=orth,
         )
         return out[None]  # keep a sharded leading axis; identical on every shard
 
@@ -194,6 +200,7 @@ def distributed_pca_from_covs(
     iters: int = 30,
     backend: str = "xla",
     polar: str = "svd",
+    orth: str = "qr",
 ) -> jax.Array:
     """Same as ``distributed_pca`` but from pre-formed local matrices (m, d, d).
 
@@ -207,7 +214,8 @@ def distributed_pca_from_covs(
         cov = jnp.mean(cov_shard, axis=0)
         v, _ = local_eigenbasis(cov, r, method=solver, iters=iters)
         out = procrustes_average_collective(
-            v, axis_name=data_axis, n_iter=n_iter, backend=backend, polar=polar
+            v, axis_name=data_axis, n_iter=n_iter,
+            backend=backend, polar=polar, orth=orth,
         )
         return out[None]
 

@@ -10,22 +10,29 @@ benchmarks run.
 All functions take local solutions as a stacked array ``vs`` of shape
 (m, d, r) — machine-major — and are jit-friendly.
 
-The aggregation hot path takes two switches:
+The aggregation hot path takes three switches (see DESIGN.md §3):
 
   * ``backend=`` ("xla" | "pallas" | "auto"): "pallas" streams the
-    bandwidth-bound Gram and apply stages through the
-    ``repro.kernels.procrustes_align`` Pallas kernels (compiled on TPU,
-    interpret mode elsewhere); "auto" picks the kernels on TPU and the
-    pure-XLA path elsewhere.
+    bandwidth-bound stages through the ``repro.kernels.procrustes_align``
+    Pallas kernels (compiled on TPU, interpret mode elsewhere); "auto"
+    picks the kernels on TPU and the pure-XLA path elsewhere.
   * ``polar=`` ("svd" | "newton-schulz"): how the r x r orthogonal polar
     factor is computed.  "svd" is the paper's closed form; on the pallas
-    backend it is the one stage that still round-trips through XLA.
-    "newton-schulz" is matmul-only; on the pallas backend it is fused into
-    the Gram kernel, making the whole round SVD-free (two kernel launches,
-    no XLA compute between them).
+    backend it is a stage that round-trips through XLA.  "newton-schulz"
+    is matmul-only and fuses into the Gram kernel.
+  * ``orth=`` ("qr" | "cholesky-qr2"): how the averaged basis is
+    re-orthonormalized at the end of each round.  "qr" is the paper's thin
+    Householder QR (always an XLA stage); "cholesky-qr2" is matmul +
+    triangular-solve only (``repro.core.orthonorm``) and, combined with
+    ``polar="newton-schulz"`` on the pallas backend, folds the *entire*
+    round into a single kernel launch
+    (``repro.kernels.procrustes_align.fused_round``) — no SVD, no
+    Householder QR, no XLA compute anywhere in a refinement round.
 
-All four combinations compute the same estimator (the differential tests
-assert parity); "pallas" accumulates in f32.
+All round structure funnels through one round-body dispatch
+(``refinement_rounds``); every cell of the (backend x polar x orth) cube
+computes the same estimator (the differential tests assert parity to 1e-5
+f64 subspace distance); "pallas" accumulates in f32.
 """
 
 from __future__ import annotations
@@ -37,6 +44,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import procrustes
+from repro.core.orthonorm import (
+    orthonormalize,
+    qr_orthonormalize,
+    resolve_orth,
+)
 from repro.core.subspace import local_eigenbasis
 
 __all__ = [
@@ -51,12 +63,6 @@ __all__ = [
 ]
 
 
-def qr_orthonormalize(v: jax.Array) -> jax.Array:
-    """Q factor of the thin QR of ``v`` (the paper's final step)."""
-    q, _ = jnp.linalg.qr(v)
-    return q
-
-
 def local_bases(
     xhats: jax.Array, r: int, *, method: str = "eigh", iters: int = 30
 ) -> jax.Array:
@@ -65,62 +71,53 @@ def local_bases(
     return jax.vmap(f)(xhats)
 
 
-def naive_average(vs: jax.Array) -> jax.Array:
+def naive_average(vs: jax.Array, *, orth: str = "qr") -> jax.Array:
     """Eq. (3): average the raw local bases, then orthonormalize.
 
     The strawman the paper shows fails: with adversarial (or random) rotations
-    the average can collapse toward zero / an arbitrary subspace.
+    the average can collapse toward zero / an arbitrary subspace — under any
+    ``orth=`` method, since the collapse happens before orthonormalization.
     """
-    return qr_orthonormalize(jnp.mean(vs, axis=0))
+    return orthonormalize(jnp.mean(vs, axis=0), orth=orth)
 
 
-def _procrustes_fix_average_pallas(
-    vs: jax.Array, ref: jax.Array, polar: str
+def _rounds_pallas(
+    vs: jax.Array, ref: jax.Array, *, n_iter: int, polar: str, orth: str
 ) -> jax.Array:
-    """Kernel-dispatched Algorithm 1 body.
+    """Kernel-dispatched round loop (Algorithm 1 body x ``n_iter``).
 
-    ``polar="newton-schulz"``: fused Gram+polar kernel -> apply kernel; the
-    r x r stage never leaves VMEM and no XLA compute runs between launches.
-    ``polar="svd"``: Gram kernel -> XLA r x r SVD -> apply kernel.
+    ``polar="newton-schulz", orth="cholesky-qr2"``: the fully fused path —
+    one ``pallas_call`` per round, XLA-free between launches (the loop
+    lives inside ``kernels.fused_round`` so padding happens once).
+    Other cells run the per-stage kernels with the r x r polar and/or the
+    final orthonormalization as XLA stages between launches.
     """
     from repro.kernels import ops as kops
 
-    if polar == "newton-schulz":
-        z = kops.batched_gram_polar(vs, ref, use_kernel=True)  # (m, r, r) f32
-    else:
-        g = kops.batched_gram(vs, ref, use_kernel=True)  # (m, r, r) f32
-        u, _, wt = jnp.linalg.svd(g, full_matrices=False)  # r x r: stays in XLA
-        z = u @ wt
-    vbar = kops.align_average(vs, z, use_kernel=True)  # (d, r) f32
-    return qr_orthonormalize(vbar).astype(vs.dtype)
+    if polar == "newton-schulz" and orth == "cholesky-qr2":
+        return kops.fused_round(vs, ref, n_iter=n_iter, use_kernel=True)
+    out = ref
+    for _ in range(max(n_iter, 1)):
+        if polar == "newton-schulz":
+            z = kops.batched_gram_polar(vs, out, use_kernel=True)
+        else:
+            g = kops.batched_gram(vs, out, use_kernel=True)  # (m, r, r) f32
+            u, _, wt = jnp.linalg.svd(g, full_matrices=False)  # stays in XLA
+            z = u @ wt
+        vbar = kops.align_average(vs, z, use_kernel=True)  # (d, r) f32
+        out = orthonormalize(vbar, orth=orth).astype(vs.dtype)
+    return out
 
 
-def procrustes_fix_average(
-    vs: jax.Array,
-    ref: jax.Array | None = None,
-    *,
-    backend: str = "xla",
-    polar: str = "svd",
+def _rounds_xla(
+    vs: jax.Array, ref: jax.Array, *, n_iter: int, polar: str, orth: str
 ) -> jax.Array:
-    """Algorithm 1: Procrustes-fix every local basis to ``ref``, average, QR.
-
-    Args:
-      vs:  (m, d, r) stacked local solutions.
-      ref: (d, r) reference solution; defaults to ``vs[0]`` per the paper.
-      backend: "xla" (pure jnp), "pallas" (kernel Gram/apply stages), or
-        "auto" (kernels on TPU, XLA elsewhere).
-      polar: "svd" (closed-form rotation) or "newton-schulz" (matmul-only;
-        fused in-kernel on the pallas backend).  See the module docstring.
-    """
-    from repro.kernels.ops import resolve_backend
-
-    procrustes.resolve_polar(polar)
-    if ref is None:
-        ref = vs[0]
-    if resolve_backend(backend) == "pallas":
-        return _procrustes_fix_average_pallas(vs, ref, polar)
-    aligned = procrustes.align_batch(vs, ref, polar=polar)
-    return qr_orthonormalize(jnp.mean(aligned, axis=0))
+    """Pure-jnp round loop: align, average, orthonormalize, repeat."""
+    out = ref
+    for _ in range(max(n_iter, 1)):
+        aligned = procrustes.align_batch(vs, out, polar=polar)
+        out = orthonormalize(jnp.mean(aligned, axis=0), orth=orth)
+    return out
 
 
 def refinement_rounds(
@@ -130,31 +127,73 @@ def refinement_rounds(
     n_iter: int = 1,
     backend: str = "xla",
     polar: str = "svd",
+    orth: str = "qr",
 ) -> jax.Array:
-    """Algorithm 2's round loop over an already-stacked (m, d, r) ``vs``:
-    run Algorithm 1 ``n_iter`` times, re-using each output as the next
-    reference.  The single home of the refinement logic — both
+    """The single home of the round structure: run the Algorithm-1 body
+    (align to ``ref``, average, orthonormalize) ``n_iter`` times over an
+    already-stacked (m, d, r) ``vs``, re-using each output as the next
+    reference, dispatched on ``backend``/``polar``/``orth``.  Both
     ``iterative_refinement`` and the pallas-topology branch of
     ``repro.core.distributed.procrustes_average_collective`` call this.
     """
+    from repro.kernels.ops import resolve_backend
+
+    procrustes.resolve_polar(polar)
+    resolve_orth(orth)
     if ref is None:
         ref = vs[0]
-    for _ in range(max(n_iter, 1)):
-        ref = procrustes_fix_average(vs, ref, backend=backend, polar=polar)
-    return ref
+    rounds = (
+        _rounds_pallas if resolve_backend(backend) == "pallas" else _rounds_xla
+    )
+    return rounds(vs, ref, n_iter=n_iter, polar=polar, orth=orth)
 
 
-@functools.partial(jax.jit, static_argnames=("n_iter", "backend", "polar"))
+def procrustes_fix_average(
+    vs: jax.Array,
+    ref: jax.Array | None = None,
+    *,
+    backend: str = "xla",
+    polar: str = "svd",
+    orth: str = "qr",
+) -> jax.Array:
+    """Algorithm 1: Procrustes-fix every local basis to ``ref``, average,
+    orthonormalize — exactly one refinement round.
+
+    Args:
+      vs:  (m, d, r) stacked local solutions.
+      ref: (d, r) reference solution; defaults to ``vs[0]`` per the paper.
+      backend: "xla" (pure jnp), "pallas" (kernel stages), or "auto"
+        (kernels on TPU, XLA elsewhere).
+      polar: "svd" (closed-form rotation) or "newton-schulz" (matmul-only).
+      orth: "qr" (thin Householder QR) or "cholesky-qr2" (matmul +
+        triangular solve; fully fused on the pallas backend).  See the
+        module docstring.
+    """
+    return refinement_rounds(
+        vs, ref, n_iter=1, backend=backend, polar=polar, orth=orth
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_iter", "backend", "polar", "orth")
+)
 def iterative_refinement(
-    vs: jax.Array, n_iter: int = 2, *, backend: str = "xla", polar: str = "svd"
+    vs: jax.Array,
+    n_iter: int = 2,
+    *,
+    backend: str = "xla",
+    polar: str = "svd",
+    orth: str = "qr",
 ) -> jax.Array:
     """Algorithm 2: repeat Algorithm 1, re-using the output as the reference.
 
     ``n_iter=1`` is exactly Algorithm 1 with the default reference.
-    ``backend`` / ``polar`` are threaded through every round's aggregation
-    (see ``procrustes_fix_average``).
+    ``backend`` / ``polar`` / ``orth`` are threaded through every round's
+    aggregation (see ``refinement_rounds``).
     """
-    return refinement_rounds(vs, n_iter=n_iter, backend=backend, polar=polar)
+    return refinement_rounds(
+        vs, n_iter=n_iter, backend=backend, polar=polar, orth=orth
+    )
 
 
 def projector_average(vs: jax.Array, r: int) -> jax.Array:

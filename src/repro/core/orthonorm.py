@@ -1,0 +1,139 @@
+"""Orthonormalization of the averaged basis — the round's final stage.
+
+Algorithm 1/2 end every round by re-orthonormalizing the aligned average
+V̄ (d x r).  Two methods are supported everywhere that stage runs
+(``orth="qr" | "cholesky-qr2"``):
+
+  * ``"qr"``           — thin Householder QR (``jnp.linalg.qr``); the
+                         paper's spelling.  Unconditionally stable, but
+                         LAPACK-style panel factorization: latency-bound on
+                         TPU and unfusable into a Pallas pipeline.
+  * ``"cholesky-qr2"`` — two rounds of CholeskyQR (Yamamoto et al. 2015):
+
+                             S = V̄ᵀV̄;  R = chol(S);  Q = V̄ R⁻¹
+
+                         applied twice.  Every step is an r x r Cholesky, an
+                         r x r triangular solve, and one tall-skinny matmul
+                         — all MXU-native, which is what lets the Pallas
+                         backend fold the whole round (Gram + Newton–Schulz
+                         polar + aligned-average + CholeskyQR2) into a
+                         single kernel launch
+                         (``repro.kernels.procrustes_align.fused_round``).
+
+Conditioning rule (the CholeskyQR analogue of ``DEFAULT_NS_ITERS``):
+
+  One CholeskyQR pass squares the condition number inside the Gram, so it
+  loses when ``eps * kappa(V̄)^2 ~ 1``; the second pass restores
+  orthogonality to roundoff provided the first pass succeeded, giving
+  CholeskyQR2 the working range
+
+      kappa(V̄) <~ eps(dtype)^(-1/2)     (~3e3 in f32, ~7e7 in f64).
+
+  Within that range a *guard* keeps the first Cholesky from breaking down:
+  if any pivot falls below ``r * eps * tr(S)`` (a rank-deficiency signal at
+  the Gram's own noise floor), the factorization is retried on the shifted
+  Gram ``S + sigma I`` with ``sigma = 11 (d + r + 1) * eps * tr(S)`` — the
+  shifted-CholeskyQR bound of Fukaya et al. 2020, which guarantees the
+  shifted factorization exists.  The shift perturbs only the conditioning
+  trajectory, not the computed span (any invertible r x r right-factor
+  preserves it), and the second pass re-measures the *actual* Gram of the
+  first pass's output, so the final Q is orthonormal to roundoff either
+  way.  Beyond the kappa range above, fall back to ``orth="qr"``.
+
+  Aggregation rounds sit far inside the range: V̄ is an average of aligned
+  orthonormal bases, so ``S ~ I + noise`` and the guard never fires (the
+  near-rank-deficient sweep in ``tests/test_orthonorm.py`` exercises it
+  directly).
+
+The in-kernel counterpart (masked-loop Cholesky + log-depth triangular
+inverse, Mosaic has no LAPACK primitives) lives in
+``repro.kernels.procrustes_align``; this module is its XLA reference and
+the ``backend="xla"`` path.  ``jnp.linalg.cholesky`` + ``triangular_solve``
+lower with no Householder (geqrf) and no SVD in the jaxpr, which the fused
+path's tests assert end to end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ORTH_METHODS",
+    "resolve_orth",
+    "qr_orthonormalize",
+    "cholesky_qr2",
+    "orthonormalize",
+    "cholqr_guard_coeffs",
+]
+
+ORTH_METHODS = ("qr", "cholesky-qr2")
+
+
+def resolve_orth(orth: str) -> str:
+    """Validate an ``orth=`` switch ("qr" | "cholesky-qr2")."""
+    if orth not in ORTH_METHODS:
+        raise ValueError(f"orth must be one of {ORTH_METHODS}, got {orth!r}")
+    return orth
+
+
+def qr_orthonormalize(v: jax.Array) -> jax.Array:
+    """Q factor of the thin QR of ``v`` (the paper's final step)."""
+    q, _ = jnp.linalg.qr(v)
+    return q
+
+
+def cholqr_guard_coeffs(d: int, r: int, eps: float) -> tuple[float, float]:
+    """(pivot-tolerance, shift) coefficients of the CholeskyQR guard.
+
+    Both scale ``tr(S)``: a pivot below ``r * eps * tr(S)`` is
+    indistinguishable from zero at the Gram's accumulation noise floor, and
+    ``11 (d + r + 1) * eps * tr(S)`` is the Fukaya et al. 2020 shift that
+    guarantees the shifted Cholesky exists.  Mirrored by the in-kernel
+    implementation in ``repro.kernels.procrustes_align``.
+    """
+    return r * eps, 11.0 * (d + r + 1) * eps
+
+
+def _cholqr_pass(v: jax.Array) -> jax.Array:
+    """One guarded CholeskyQR pass: Q = V R^-1 with R = chol(V^T V)."""
+    d, r = v.shape[-2], v.shape[-1]
+    eps = float(jnp.finfo(v.dtype).eps)
+    pivot_c, shift_c = cholqr_guard_coeffs(d, r, eps)
+    s = jnp.swapaxes(v, -2, -1) @ v
+    tr = jnp.trace(s, axis1=-2, axis2=-1)[..., None, None]
+    eye = jnp.eye(r, dtype=v.dtype)
+    l0 = jnp.linalg.cholesky(s)
+    diag0 = jnp.diagonal(l0, axis1=-2, axis2=-1)
+    # Breakdown signal: NaN from a negative pivot, or a pivot at the noise
+    # floor (diag(L)^2 are the pivots).  Retry on the shifted Gram.
+    ok = jnp.all(jnp.isfinite(diag0), axis=-1) & jnp.all(
+        diag0 * diag0 > pivot_c * tr[..., 0], axis=-1
+    )
+    # The 1e-30 floor keeps the all-zero degenerate V̄ finite (Q = 0).
+    l1 = jnp.linalg.cholesky(s + (shift_c * tr + 1e-30) * eye)
+    l = jnp.where(ok[..., None, None], jnp.where(jnp.isfinite(l0), l0, 0.0), l1)
+    # Q = V (L^T)^-1: solve x @ L^T = V.
+    return jax.lax.linalg.triangular_solve(
+        l, v, left_side=False, lower=True, transpose_a=True
+    )
+
+
+def cholesky_qr2(v: jax.Array) -> jax.Array:
+    """Orthonormalize ``v`` (..., d, r) by two guarded CholeskyQR passes.
+
+    SVD- and Householder-free: the jaxpr contains only matmuls, an r x r
+    Cholesky, and triangular solves.  Computes in f32 at minimum (f64 in,
+    f64 out); see the module docstring for the conditioning rule and guard.
+    """
+    compute = jnp.promote_types(v.dtype, jnp.float32)
+    q = _cholqr_pass(v.astype(compute))
+    q = _cholqr_pass(q)
+    return q.astype(v.dtype)
+
+
+def orthonormalize(v: jax.Array, *, orth: str = "qr") -> jax.Array:
+    """Orthonormalize the columns of ``v`` by the selected method."""
+    if resolve_orth(orth) == "cholesky-qr2":
+        return cholesky_qr2(v)
+    return qr_orthonormalize(v)

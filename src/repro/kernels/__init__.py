@@ -1,7 +1,9 @@
 """Pallas TPU kernels for the framework's compute hot spots.
 
   covariance.py       — tiled Gram matrix X^T X (local covariance)
-  procrustes_align.py — batched Gram + aligned-average stages of Algorithm 1
+  procrustes_align.py — batched Gram + aligned-average stages of Algorithm 1,
+                        up to the fully fused one-launch round (fused_round:
+                        Gram + Newton–Schulz polar + average + CholeskyQR2)
   flash_attention.py  — causal/sliding-window GQA flash attention (fwd)
 
 Each kernel has a pure-jnp oracle in ref.py and a dispatching wrapper in

@@ -33,6 +33,7 @@ __all__ = [
     "batched_gram",
     "batched_gram_polar",
     "align_average",
+    "fused_round",
     "attention",
 ]
 
@@ -94,6 +95,17 @@ def align_average(
 ) -> jax.Array:
     return _dispatch(
         _pa.align_average, _ref.align_average, use_kernel, vs, zs, **kw
+    )
+
+
+def fused_round(
+    vs: jax.Array, ref: jax.Array, *, use_kernel: bool | None = None, **kw
+) -> jax.Array:
+    """Full Algorithm-1 round(s), one launch each: Gram + Newton–Schulz
+    polar + aligned-average + CholeskyQR2 fused (the
+    ``polar="newton-schulz", orth="cholesky-qr2"`` pallas path)."""
+    return _dispatch(
+        _pa.fused_round, _ref.fused_round, use_kernel, vs, ref, **kw
     )
 
 

@@ -55,7 +55,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["batched_gram", "batched_gram_polar", "align_average"]
+__all__ = [
+    "batched_gram",
+    "batched_gram_polar",
+    "align_average",
+    "fused_round",
+]
 
 # Keep in sync with repro.core.procrustes.DEFAULT_NS_ITERS (not imported to
 # keep the kernel package free of core dependencies).
@@ -80,6 +85,17 @@ def _batched_gram_kernel(v, ref, out):
     _gram_accumulate(v, ref, out)
 
 
+def _ns_polar_tile(g: jax.Array, ns_iters: int) -> jax.Array:
+    """Newton–Schulz polar factor of an in-VMEM (r, r) f32 tile."""
+    norm = jnp.sqrt(jnp.sum(g * g))
+    x = g / jnp.maximum(norm, 1e-30)
+    eye3 = 3.0 * jnp.eye(g.shape[-1], dtype=jnp.float32)
+    for _ in range(ns_iters):
+        xtx = jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+        x = 0.5 * jnp.dot(x, eye3 - xtx, preferred_element_type=jnp.float32)
+    return x
+
+
 def _batched_gram_polar_kernel(v, ref, out, *, nk: int, ns_iters: int):
     k = pl.program_id(1)
 
@@ -93,14 +109,7 @@ def _batched_gram_polar_kernel(v, ref, out, *, nk: int, ns_iters: int):
     def _polar():
         # The Gram tile is complete; run Newton–Schulz on it in VMEM and
         # emit the orthogonal polar factor Z_i in place of G_i.
-        g = out[0]
-        norm = jnp.sqrt(jnp.sum(g * g))
-        x = g / jnp.maximum(norm, 1e-30)
-        eye3 = 3.0 * jnp.eye(g.shape[-1], dtype=jnp.float32)
-        for _ in range(ns_iters):
-            xtx = jnp.dot(x.T, x, preferred_element_type=jnp.float32)
-            x = 0.5 * jnp.dot(x, eye3 - xtx, preferred_element_type=jnp.float32)
-        out[...] = x[None]
+        out[...] = _ns_polar_tile(out[0], ns_iters)[None]
 
 
 def _gram_stage_call(kernel, vs, ref, *, bk, interpret):
@@ -210,4 +219,245 @@ def align_average(
         out_shape=jax.ShapeDtypeStruct((dp, r), jnp.float32),
         interpret=interpret,
     )(vs, zs)
+    return out[:d]
+
+
+# ---------------------------------------------------------------------------
+# Fused full-round kernel: Gram + NS polar + aligned-average + CholeskyQR2
+# in a single pallas_call (the ``orth="cholesky-qr2"`` path).
+
+
+def _masked_cholesky(a0, row, col, eps_floor=1e-30):
+    """Lower Cholesky of an (r, r) f32 tile by masked rank-1 updates.
+
+    Mosaic has no LAPACK primitives, so the factorization is r ``fori_loop``
+    steps of vector ops: extract pivot/column k by iota masks, scale, and
+    apply the rank-1 Schur update.  Also returns the minimum pivot seen (the
+    breakdown signal for the shift guard).
+    """
+    r = a0.shape[-1]
+
+    def body(k, carry):
+        a, minpiv = carry
+        akk = jnp.sum(jnp.where((row == k) & (col == k), a, 0.0))
+        ck = jnp.sum(
+            jnp.where((col == k) & (row >= k), a, 0.0), axis=1, keepdims=True
+        )
+        lk = ck * jax.lax.rsqrt(jnp.maximum(akk, eps_floor))
+        schur = a - lk * jnp.swapaxes(lk, 0, 1)
+        a = jnp.where(
+            col == k, jnp.broadcast_to(lk, (r, r)), jnp.where(col > k, schur, a)
+        )
+        return a, jnp.minimum(minpiv, akk)
+
+    a, minpiv = jax.lax.fori_loop(
+        0, r, body, (a0, jnp.asarray(jnp.inf, jnp.float32))
+    )
+    return jnp.where(row >= col, a, 0.0), minpiv
+
+
+def _cholqr_inverse_factor(s, *, pivot_c: float, shift_c: float):
+    """W = R^-1 (upper) with R = chol(S) of an (r, r) f32 Gram tile.
+
+    The CholeskyQR step Q = V̄ R^-1 then becomes one tall-skinny matmul per
+    d-block.  Guard rule mirrors ``repro.core.orthonorm.cholqr_guard_coeffs``
+    (not imported: the kernel package stays core-free): if any pivot falls
+    below ``pivot_c * tr(S)``, refactor the shifted Gram
+    ``S + shift_c * tr(S) * I``.  The inverse is exact in ceil(log2 r)
+    matmuls: L = D (I + N) with N strictly lower (nilpotent), so
+    L^-1 = (I - N)(I + N^2)(I + N^4)... D^-1.
+    """
+    r = s.shape[-1]
+    row = jax.lax.broadcasted_iota(jnp.int32, (r, r), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (r, r), 1)
+    eye = (row == col).astype(jnp.float32)
+    tr = jnp.sum(s * eye)
+    l0, minpiv = _masked_cholesky(s, row, col)
+    # The 1e-30 floor keeps the all-zero degenerate tile finite (Q = 0);
+    # it mirrors the XLA reference in repro.core.orthonorm.
+    ls, _ = _masked_cholesky(s + (shift_c * tr + 1e-30) * eye, row, col)
+    l = jnp.where(minpiv > pivot_c * tr, l0, ls)
+    dinv = 1.0 / jnp.sum(jnp.where(row == col, l, 0.0), axis=1, keepdims=True)
+    n = jnp.where(row > col, l * dinv, 0.0)
+    x = eye - n
+    pw = jnp.dot(n, n, preferred_element_type=jnp.float32)
+    span = 2
+    while span < r:
+        x = jnp.dot(x, eye + pw, preferred_element_type=jnp.float32)
+        pw = jnp.dot(pw, pw, preferred_element_type=jnp.float32)
+        span *= 2
+    linv = x * jnp.swapaxes(dinv, 0, 1)
+    return jnp.swapaxes(linv, 0, 1)
+
+
+# Slot names of the fused kernel's (4, r, r) stats buffer.
+_S_ACC1, _S_ACC2, _W1, _W2 = 0, 1, 2, 3
+
+
+def _fused_round_kernel(
+    v, ref, out, gz, stats, vbar, *,
+    nk: int, m: int, ns_iters: int, pivot_c: float, shift_c: float,
+):
+    """One Algorithm-1 round in a single launch; see ``fused_round``.
+
+    Grid (4, nk, m), all phases d-block-major / machine-minor:
+
+      phase 0  accumulate every machine's Gram tile  G_i += V_i[j]^T ref[j]
+      phase 1  NS-polarize G_i -> Z_i in place (at each machine's first
+               step), stream V̄[j] = (1/m) sum_i V_i[j] Z_i, accumulate
+               S1 += V̄[j]^T V̄[j]; at the last step W1 = chol(S1)^-1
+      phase 2  re-stream V̄[j], Q1[j] = V̄[j] W1, S2 += Q1[j]^T Q1[j];
+               at the last step W2 = chol(S2)^-1
+      phase 3  re-stream V̄[j], emit Q[j] = (V̄[j] W1) W2
+
+    V̄ is recomputed from the resident Z stack in phases 2/3 instead of
+    being staged in HBM — the round costs 4 streams of ``vs`` instead of
+    the two-launch path's 2, trading bandwidth for zero XLA round-trips
+    (the launch-latency win; see DESIGN.md §3.2).  Phase 3 recomputes
+    Q1 bitwise-identically to phase 2, so W2 corrects the orthogonality of
+    the *measured* Q1, preserving the CholeskyQR2 error bound.
+    """
+    p = pl.program_id(0)
+    j = pl.program_id(1)
+    i = pl.program_id(2)
+    mi = pl.ds(i, 1)
+    vf = v[0].astype(jnp.float32)
+
+    @pl.when(p == 0)
+    def _gram():
+        @pl.when(j == 0)
+        def _init():
+            gz[mi] = jnp.zeros_like(gz[mi])
+
+        gz[mi] += jnp.dot(
+            vf.T, ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )[None]
+
+    @pl.when((p == 1) & (j == 0))
+    def _polarize():
+        gz[mi] = _ns_polar_tile(gz[mi][0], ns_iters)[None]
+
+    @pl.when(p > 0)
+    def _stream_vbar():
+        @pl.when(i == 0)
+        def _init():
+            vbar[...] = jnp.zeros_like(vbar)
+
+        vbar[...] += jnp.dot(
+            vf, gz[mi][0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when((p == 1) & (i == m - 1))
+    def _accum_s1():
+        vb = vbar[...] / m
+        c = jnp.dot(vb.T, vb, preferred_element_type=jnp.float32)
+        stats[_S_ACC1] = jnp.where(j == 0, c, stats[_S_ACC1] + c)
+
+        @pl.when(j == nk - 1)
+        def _factor1():
+            stats[_W1] = _cholqr_inverse_factor(
+                stats[_S_ACC1], pivot_c=pivot_c, shift_c=shift_c
+            )
+
+    @pl.when((p == 2) & (i == m - 1))
+    def _accum_s2():
+        q1 = jnp.dot(
+            vbar[...] / m, stats[_W1], preferred_element_type=jnp.float32
+        )
+        c = jnp.dot(q1.T, q1, preferred_element_type=jnp.float32)
+        stats[_S_ACC2] = jnp.where(j == 0, c, stats[_S_ACC2] + c)
+
+        @pl.when(j == nk - 1)
+        def _factor2():
+            stats[_W2] = _cholqr_inverse_factor(
+                stats[_S_ACC2], pivot_c=pivot_c, shift_c=shift_c
+            )
+
+    @pl.when((p == 3) & (i == m - 1))
+    def _emit():
+        q1 = jnp.dot(
+            vbar[...] / m, stats[_W1], preferred_element_type=jnp.float32
+        )
+        q = jnp.dot(q1, stats[_W2], preferred_element_type=jnp.float32)
+        out[...] = q.astype(out.dtype)
+
+
+def _fused_round_call(vs, ref, *, bk, ns_iters, pivot_c, shift_c, interpret):
+    """Single-launch round on pre-padded inputs; returns padded (dp, r)."""
+    m, dp, r = vs.shape
+    nk = dp // bk
+    grid = (4, nk, m)
+    out, _, _, _ = pl.pallas_call(
+        functools.partial(
+            _fused_round_kernel, nk=nk, m=m, ns_iters=ns_iters,
+            pivot_c=pivot_c, shift_c=shift_c,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bk, r), lambda p, j, i: (i, j, 0)),
+            pl.BlockSpec((bk, r), lambda p, j, i: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bk, r), lambda p, j, i: (j, 0)),
+            # Round-persistent state: constant block indices keep these
+            # resident in VMEM for the whole grid (never re-fetched).
+            pl.BlockSpec((m, r, r), lambda p, j, i: (0, 0, 0)),
+            pl.BlockSpec((4, r, r), lambda p, j, i: (0, 0, 0)),
+            pl.BlockSpec((bk, r), lambda p, j, i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((dp, r), vs.dtype),
+            jax.ShapeDtypeStruct((m, r, r), jnp.float32),   # G_i -> Z_i
+            jax.ShapeDtypeStruct((4, r, r), jnp.float32),   # S1/S2/W1/W2
+            jax.ShapeDtypeStruct((bk, r), jnp.float32),     # V̄[j] tile
+        ],
+        interpret=interpret,
+    )(vs, ref)
+    return out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_iter", "bk", "ns_iters", "interpret")
+)
+def fused_round(
+    vs: jax.Array,
+    ref: jax.Array,
+    *,
+    n_iter: int = 1,
+    bk: int = 2048,
+    ns_iters: int = _DEFAULT_NS_ITERS,
+    interpret: bool = False,
+) -> jax.Array:
+    """``n_iter`` Algorithm-1 rounds, one pallas_call per round.
+
+    Each round computes ``cholesky_qr2(mean_i(V_i @ polar(V_i^T @ ref)))``
+    entirely in-kernel — Gram, Newton–Schulz polar, aligned average, and
+    both CholeskyQR2 passes — so a round is exactly one launch with no XLA
+    compute (no SVD, no Householder QR) anywhere.  Padding happens once
+    outside the loop: round k's (dp, r) output feeds round k+1's reference
+    directly, keeping the ``n_iter > 1`` loop XLA-free between launches.
+
+    VMEM budget per step (bk=2048, r=128, m=16, f32, double-buffered v):
+    v blocks ~2 MiB + ref/out/vbar tiles 3 MiB + Z stack 1 MiB + stats
+    256 KiB — comfortably under the 16 MiB envelope.  The CholeskyQR guard
+    coefficients mirror ``repro.core.orthonorm.cholqr_guard_coeffs``.
+
+    Returns the (d, r) orthonormal round output in ``vs.dtype``.
+    """
+    m, d, r = vs.shape
+    bk = min(bk, max(8, d))
+    d_pad = (-d) % bk
+    if d_pad:
+        vs = jnp.pad(vs, ((0, 0), (0, d_pad), (0, 0)))
+        ref = jnp.pad(ref, ((0, d_pad), (0, 0)))
+    eps = float(jnp.finfo(jnp.float32).eps)
+    # Keep in sync with repro.core.orthonorm.cholqr_guard_coeffs.
+    pivot_c, shift_c = r * eps, 11.0 * (d + r + 1) * eps
+    out = ref.astype(vs.dtype)
+    for _ in range(max(n_iter, 1)):
+        out = _fused_round_call(
+            vs, out, bk=bk, ns_iters=ns_iters,
+            pivot_c=pivot_c, shift_c=shift_c, interpret=interpret,
+        )
     return out[:d]

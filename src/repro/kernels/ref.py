@@ -14,6 +14,7 @@ __all__ = [
     "batched_gram",
     "batched_gram_polar",
     "align_average",
+    "fused_round",
     "attention",
 ]
 
@@ -42,6 +43,26 @@ def batched_gram_polar(
 
     iters = DEFAULT_NS_ITERS if ns_iters is None else ns_iters
     return newton_schulz_polar(batched_gram(vs, ref), iters=iters)
+
+
+def fused_round(
+    vs: jax.Array,
+    ref: jax.Array,
+    *,
+    n_iter: int = 1,
+    ns_iters: int | None = None,
+) -> jax.Array:
+    """Oracle for the fused full-round kernel: ``n_iter`` rounds of
+    ``cholesky_qr2(align_average(vs, batched_gram_polar(vs, ref)))``.
+    vs: (m, d, r), ref: (d, r) -> (d, r) in vs.dtype."""
+    # Function-level import for the same circularity reason as above.
+    from repro.core.orthonorm import cholesky_qr2
+
+    out = ref
+    for _ in range(max(n_iter, 1)):
+        zs = batched_gram_polar(vs, out, ns_iters=ns_iters)
+        out = cholesky_qr2(align_average(vs, zs)).astype(vs.dtype)
+    return out
 
 
 def align_average(vs: jax.Array, zs: jax.Array) -> jax.Array:

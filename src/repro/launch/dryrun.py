@@ -313,7 +313,7 @@ def _gb(x):
 
 def dryrun_paper_pca(
     *, multi_pod: bool = False, device_count=None, verbose=True,
-    backend: str = "xla", polar: str = "svd",
+    backend: str = "xla", polar: str = "svd", orth: str = "qr",
 ):
     """Dry-run the paper's own workload (distributed PCA, Algorithm 2).
 
@@ -321,7 +321,9 @@ def dryrun_paper_pca(
     the collective-bytes accounting shows the psum-vs-all-gather topology
     trade directly.  ``polar`` selects the r x r rotation method
     ("svd" | "newton-schulz"); with "newton-schulz" the lowered graph is
-    SVD-free, which the HLO accounting reflects.
+    SVD-free, which the HLO accounting reflects.  ``orth`` selects the
+    per-round orthonormalization ("qr" | "cholesky-qr2"); the SVD- and
+    Householder-free cell is (pallas, newton-schulz, cholesky-qr2).
     """
     from repro.configs.paper_pca import CONFIG as pcfg
     from repro.core.distributed import distributed_pca
@@ -339,6 +341,7 @@ def dryrun_paper_pca(
         "kind": "eigen",
         "backend": backend,
         "polar": polar,
+        "orth": orth,
         "mesh": {"shape": list(mesh.shape.values()), "axes": list(mesh.axis_names)},
     }
     t0 = time.time()
@@ -347,7 +350,7 @@ def dryrun_paper_pca(
         return distributed_pca(
             samples, mesh, pcfg.r,
             n_iter=pcfg.n_iter, solver=pcfg.solver, iters=pcfg.solver_iters,
-            backend=backend, polar=polar,
+            backend=backend, polar=polar, orth=orth,
         )
 
     lowered = jax.jit(job).lower(samples_like)
@@ -386,6 +389,9 @@ def main():
     ap.add_argument("--polar", default="svd",
                     choices=["svd", "newton-schulz"],
                     help="r x r polar factor for --paper-pca")
+    ap.add_argument("--orth", default="qr",
+                    choices=["qr", "cholesky-qr2"],
+                    help="per-round orthonormalization for --paper-pca")
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--device-count", type=int, default=512,
                     help="reduced placeholder device count for CI smoke")
@@ -450,7 +456,8 @@ def main():
         try:
             if arch == "paper-pca":
                 rec = dryrun_paper_pca(multi_pod=mp, device_count=args.device_count,
-                                       backend=args.backend, polar=args.polar)
+                                       backend=args.backend, polar=args.polar,
+                                       orth=args.orth)
             else:
                 rec = dryrun_cell(
                     arch, shape, multi_pod=mp, eigen=args.eigen,

@@ -44,6 +44,7 @@ def run(
     mesh=None,
     backend: str = "xla",
     polar: str = "svd",
+    orth: str = "qr",
 ):
     mesh = mesh or make_host_mesh(model=1)
     m = mesh.shape["data"]
@@ -57,7 +58,7 @@ def run(
     t0 = time.perf_counter()
     v_dist = distributed_pca(
         samples, mesh, r, n_iter=n_iter, solver=solver, iters=iters,
-        backend=backend, polar=polar,
+        backend=backend, polar=polar, orth=orth,
     )
     v_dist.block_until_ready()
     t_dist = time.perf_counter() - t0
@@ -73,6 +74,7 @@ def run(
         "r": r,
         "backend": backend,
         "polar": polar,
+        "orth": orth,
         "dist_aligned": float(dist_2(v_dist, v1)),
         "dist_central": float(dist_2(v_cent, v1)),
         "dist_naive": float(dist_2(naive_average(vs), v1)),
@@ -96,11 +98,17 @@ def main():
                     help="r x r polar factor: closed-form SVD or the "
                          "matmul-only Newton-Schulz iteration (fused "
                          "in-kernel on the pallas backend)")
+    ap.add_argument("--orth", default="qr", choices=["qr", "cholesky-qr2"],
+                    help="per-round orthonormalization: thin Householder "
+                         "QR or CholeskyQR2 (with --backend pallas "
+                         "--polar newton-schulz the whole round fuses "
+                         "into a single kernel launch)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
     _, stats = run(
         args.d, args.r, args.n_per_shard, n_iter=args.n_iter,
         solver=args.solver, backend=args.backend, polar=args.polar,
+        orth=args.orth,
     )
     for k, v in stats.items():
         print(f"{k}: {v}")

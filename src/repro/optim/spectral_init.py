@@ -30,11 +30,13 @@ def distributed_spectral_init(
     iters: int = 40,
     backend: str = "xla",
     polar: str = "svd",
+    orth: str = "qr",
 ) -> jax.Array:
     """a: (N, d) design vectors, y: (N,) measurements, sharded over the mesh.
 
-    ``backend`` selects the aggregation path ("xla" | "pallas" | "auto") and
-    ``polar`` the rotation method ("svd" | "newton-schulz"), see
+    ``backend`` selects the aggregation path ("xla" | "pallas" | "auto"),
+    ``polar`` the rotation method ("svd" | "newton-schulz"), and ``orth``
+    the per-round orthonormalization ("qr" | "cholesky-qr2"), see
     ``repro.core.distributed``.  Returns the (d, r) Procrustes-averaged
     spectral initialiser X_0.
     """
@@ -43,7 +45,8 @@ def distributed_spectral_init(
         d_n = truncated_second_moment(a_s, y_s)
         v, _ = local_eigenbasis(d_n, r, method=solver, iters=iters)
         out = procrustes_average_collective(
-            v, axis_name=data_axis, n_iter=n_iter, backend=backend, polar=polar
+            v, axis_name=data_axis, n_iter=n_iter,
+            backend=backend, polar=polar, orth=orth,
         )
         return out[None]
 

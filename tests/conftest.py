@@ -46,6 +46,35 @@ def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
     return proc.stdout
 
 
+def subspace_dist64(a, b) -> float:
+    """sin of the largest principal angle between the column spans of a and
+    b, in f64 (below the f32 ``dist_2`` floor).  Re-exported for the
+    parity/acceptance suites; lives in ``repro.core.metrics``."""
+    from repro.core.metrics import subspace_dist64 as _sd
+
+    return _sd(a, b)
+
+
+def jaxpr_primitives(closed_jaxpr) -> list:
+    """All primitive names in a jaxpr, recursing into sub-jaxprs (pjit
+    bodies, control flow, pallas_call kernels)."""
+    names = []
+
+    def walk(jxp):
+        for eqn in jxp.eqns:
+            names.append(eqn.primitive.name)
+            for p in eqn.params.values():
+                vals = p if isinstance(p, (list, tuple)) else [p]
+                for v in vals:
+                    if hasattr(v, "eqns"):
+                        walk(v)
+                    elif hasattr(v, "jaxpr"):
+                        walk(v.jaxpr)
+
+    walk(closed_jaxpr.jaxpr)
+    return names
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     import jax

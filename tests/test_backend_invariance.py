@@ -12,10 +12,14 @@
    must match ``backend="xla"`` within 1e-5 through the public API,
    including on ragged, non-MXU-aligned shapes.
 
-3. Polar parity: every (backend, polar) cell of the dispatch matrix —
-   {xla, pallas} x {svd, newton-schulz} — computes the same estimator as
-   the (xla, svd) reference cell (the fused-NS cell is the SVD-free
-   single-pipeline path).
+3. Dispatch-cube parity: every (backend x polar x orth) cell of the
+   dispatch cube — {xla, pallas} x {svd, newton-schulz} x
+   {qr, cholesky-qr2} — computes the same estimator as the
+   (xla, svd, qr) reference cell, to <= 1e-5 f64 subspace distance,
+   including on a near-rank-deficient aligned average where the
+   CholeskyQR2 conditioning guard is live.  The
+   (pallas, newton-schulz, cholesky-qr2) cell is the fused one-launch
+   path.
 
 Parametrized over seeds rather than hypothesis so the property sweep runs
 even without the 'test' extra installed.
@@ -26,10 +30,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import subspace_dist64
+
 from repro.core import dist_2, iterative_refinement, procrustes_fix_average
 from repro.data.synthetic import random_orthogonal
 
 BACKENDS = ["xla", "pallas"]
+POLARS = ["svd", "newton-schulz"]
+ORTHS = ["qr", "cholesky-qr2"]
 
 # deliberately ragged: d not a multiple of 8, r < 8, and an m == 1 case;
 # d = 2100 > the kernels' default 2048 block exercises the pad path through
@@ -119,18 +127,71 @@ def test_backend_polar_matrix_parity(backend, polar, m, d, r):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 
 
+def _weak_direction_stack(seed, m, d, r, eps=0.05):
+    """Local solutions agreeing on r-1 strong directions plus one *weak*
+    common direction of norm ~eps (deliberately non-orthonormal, as from an
+    unnormalized sketch): the aligned average has kappa(V̄) ~ 1/eps = 20,
+    where one CholeskyQR pass already loses ~eps_f32 * kappa^2 ~ 5e-5 of
+    orthogonality — the second pass and the conditioning rule are live.
+    The Grams stay well-conditioned (every machine sees the same weak
+    direction), so the polar methods still agree."""
+    key = jax.random.PRNGKey(seed)
+    q = jnp.linalg.qr(jax.random.normal(key, (d, r)))[0]
+    noise = 0.01 * jax.random.normal(jax.random.PRNGKey(seed + 1), (m, d, r))
+    scale = jnp.concatenate(
+        [jnp.ones((r - 1,)), jnp.asarray([eps])]
+    )
+    return (q[None] + noise) * scale
+
+
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_polar_parity_iterative_refinement(backend):
+@pytest.mark.parametrize("polar", POLARS)
+@pytest.mark.parametrize("orth", ORTHS)
+@pytest.mark.parametrize(
+    "stack", ["ragged", "padded", "near-deficient"],
+)
+def test_backend_polar_orth_cube_parity(backend, polar, orth, stack):
+    """Acceptance: the full dispatch cube agrees with the (xla, svd, qr)
+    reference to <= 1e-5 f64 subspace distance — on ragged shapes, the
+    d > 2048 pad path, and a near-rank-deficient aligned average."""
+    vs = {
+        "ragged": _orthonormal_stack(42, 3, 205, 5),
+        "padded": _orthonormal_stack(43, 2, 2100, 5),
+        "near-deficient": _weak_direction_stack(44, 8, 160, 4),
+    }[stack]
+    a = procrustes_fix_average(vs, backend="xla", polar="svd", orth="qr")
+    b = procrustes_fix_average(vs, backend=backend, polar=polar, orth=orth)
+    assert subspace_dist64(a, b) <= 1e-5, (backend, polar, orth, stack)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("orth", ORTHS)
+def test_polar_parity_iterative_refinement(backend, orth):
+    """orth="qr" cells agree elementwise (same orthonormalization, so the
+    same in-span representative); "cholesky-qr2" picks a different (sign /
+    rotation) representative of the same subspace, so parity is asserted
+    on the span."""
     vs = _orthonormal_stack(11, 4, 130, 4)
     a = iterative_refinement(vs, n_iter=3, backend="xla", polar="svd")
-    b = iterative_refinement(vs, n_iter=3, backend=backend, polar="newton-schulz")
-    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    b = iterative_refinement(
+        vs, n_iter=3, backend=backend, polar="newton-schulz", orth=orth
+    )
+    if orth == "qr":
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    else:
+        assert subspace_dist64(a, b) <= 1e-5
 
 
 def test_polar_invalid_raises():
     vs = _orthonormal_stack(0, 2, 16, 2)
     with pytest.raises(ValueError):
         procrustes_fix_average(vs, polar="cholesky")
+
+
+def test_orth_invalid_raises():
+    vs = _orthonormal_stack(0, 2, 16, 2)
+    with pytest.raises(ValueError):
+        procrustes_fix_average(vs, orth="householder")
 
 
 def test_auto_backend_resolves():

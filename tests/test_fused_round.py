@@ -1,0 +1,158 @@
+"""Acceptance suite for the fused one-launch refinement round.
+
+The tentpole claims of the ``backend="pallas", polar="newton-schulz",
+orth="cholesky-qr2"`` cell:
+
+  * The fused kernel (``kernels.procrustes_align.fused_round``) matches its
+    XLA oracle (``kernels.ref.fused_round``) elementwise on aligned and
+    ragged shapes, single- and multi-round.
+  * A refinement round lowers to **exactly one pallas_call**, and the
+    jaxpr of ``iterative_refinement`` on the fused cell contains no SVD
+    and no Householder/geqrf QR — anywhere, including inside the kernel
+    (the in-kernel Cholesky is masked vector ops, not a LAPACK call).
+  * ``n_iter`` rounds lower to exactly ``n_iter`` pallas_calls (the loop
+    is launch-per-round with no XLA compute between launches).
+  * The round output is orthonormal to f32 roundoff and matches the
+    (xla, svd, qr) reference estimator to <= 1e-5 f64 subspace distance.
+
+Interpret-mode lanes run everywhere; the compiled-TPU lane is the same
+assertion set without ``interpret`` and is skipped off-TPU.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import jaxpr_primitives, subspace_dist64
+
+from repro.core import iterative_refinement, procrustes_fix_average
+from repro.kernels import procrustes_align, ref
+from repro.kernels.ops import on_tpu
+
+# Primitives that must never appear in the fused path's jaxpr.  ("qr" is
+# checked as a primitive name, not a substring: "sqrt" would false-alarm.)
+BANNED = {"svd", "qr", "geqrf", "householder_product"}
+
+
+def _stack(seed, m, d, r):
+    key = jax.random.PRNGKey(seed)
+    return jnp.linalg.qr(jax.random.normal(key, (m, d, r)))[0]
+
+
+@pytest.mark.parametrize(
+    "m,d,r", [(5, 300, 8), (3, 205, 5), (1, 130, 3), (2, 2100, 5), (4, 64, 1)]
+)
+def test_fused_kernel_matches_oracle(m, d, r):
+    """Kernel == oracle to f32 roundoff, including the pad path (d=2100 >
+    the 2048 block), m == 1, and the rank-1 degenerate case."""
+    vs = _stack(m * d + r, m, d, r)
+    zk = procrustes_align.fused_round(vs, vs[0], interpret=True)
+    zo = ref.fused_round(vs, vs[0])
+    np.testing.assert_allclose(np.asarray(zk), np.asarray(zo), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(zk.T @ zk), np.eye(r), atol=1e-5
+    )
+
+
+def test_fused_kernel_multi_round():
+    vs = _stack(0, 4, 150, 6)
+    zk = procrustes_align.fused_round(vs, vs[0], n_iter=3, interpret=True)
+    zo = ref.fused_round(vs, vs[0], n_iter=3)
+    np.testing.assert_allclose(np.asarray(zk), np.asarray(zo), atol=1e-6)
+
+
+def test_fused_kernel_ns_iteration_sweep():
+    """ns_iters threads through to the in-kernel Newton–Schulz stage."""
+    vs = _stack(7, 3, 96, 6)
+    for it in (2, 8, 24):
+        zk = procrustes_align.fused_round(
+            vs, vs[0], ns_iters=it, interpret=True
+        )
+        zo = ref.fused_round(vs, vs[0], ns_iters=it)
+        np.testing.assert_allclose(np.asarray(zk), np.asarray(zo), atol=1e-6)
+
+
+def test_fused_round_estimator_parity():
+    """Acceptance: the fused cell == the (xla, svd, qr) reference estimator
+    to <= 1e-5 f64 subspace distance through the public API."""
+    for m, d, r in [(4, 205, 5), (3, 96, 4), (2, 2100, 5)]:
+        vs = _stack(m * d, m, d, r)
+        baseline = procrustes_fix_average(
+            vs, backend="xla", polar="svd", orth="qr"
+        )
+        fused = procrustes_fix_average(
+            vs, backend="pallas", polar="newton-schulz", orth="cholesky-qr2"
+        )
+        assert subspace_dist64(baseline, fused) <= 1e-5
+
+
+def _fused_cell(n_iter):
+    def f(v):
+        return iterative_refinement(
+            v, n_iter,
+            backend="pallas", polar="newton-schulz", orth="cholesky-qr2",
+        )
+
+    return f
+
+
+@pytest.mark.parametrize("n_iter", [1, 3])
+def test_jaxpr_one_pallas_call_per_round(n_iter):
+    """Acceptance: a round is exactly one pallas_call, no SVD, no
+    Householder QR — for any round count (the loop is launch-per-round)."""
+    vs = _stack(0, 3, 64, 4)
+    prims = jaxpr_primitives(jax.make_jaxpr(_fused_cell(n_iter))(vs))
+    assert prims.count("pallas_call") == n_iter
+    assert not BANNED.intersection(prims), sorted(
+        BANNED.intersection(prims)
+    )
+    # The in-kernel CholeskyQR2 is masked vector ops — not a LAPACK call
+    # that would fail to lower under Mosaic.
+    assert "cholesky" not in prims and "triangular_solve" not in prims
+
+
+def test_jaxpr_positive_controls():
+    """The assertions above have teeth: the qr orth cell still lowers a
+    QR, and the svd polar cell an SVD."""
+    vs = _stack(0, 3, 64, 4)
+
+    def with_qr(v):
+        return iterative_refinement(
+            v, 1, backend="pallas", polar="newton-schulz", orth="qr"
+        )
+
+    def with_svd(v):
+        return iterative_refinement(
+            v, 1, backend="pallas", polar="svd", orth="cholesky-qr2"
+        )
+
+    assert "qr" in jaxpr_primitives(jax.make_jaxpr(with_qr)(vs))
+    assert "svd" in jaxpr_primitives(jax.make_jaxpr(with_svd)(vs))
+
+
+def test_guarded_cholesky_in_kernel():
+    """A collapsed V̄ (naive mean of sign-flipped bases) exercises the
+    in-kernel pivot guard: output stays finite."""
+    u = _stack(11, 1, 120, 4)[0]
+    vs = jnp.stack([u, -u, u, -u])  # mean collapses to ~0
+    out = procrustes_align.fused_round(vs, u, interpret=True)
+    # (The *aligned* average does not collapse — alignment flips the signs
+    # back — but intermediate rounds see a perfectly conditioned stack;
+    # force the degenerate Gram by feeding a zero reference instead.)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    zref = jnp.zeros_like(u)
+    out2 = procrustes_align.fused_round(vs, zref, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(out2)))
+
+
+@pytest.mark.skipif(not on_tpu(), reason="compiled-TPU lane")
+def test_fused_round_compiled_tpu():
+    """Same differential claims, compiled by Mosaic instead of interpreted."""
+    m, d, r = 8, 4096, 64
+    vs = _stack(0, m, d, r)
+    zk = procrustes_align.fused_round(vs, vs[0], interpret=False)
+    zo = ref.fused_round(vs, vs[0])
+    np.testing.assert_allclose(np.asarray(zk), np.asarray(zo), atol=1e-4)
+    baseline = procrustes_fix_average(vs, backend="xla", polar="svd")
+    assert subspace_dist64(baseline, zk) <= 1e-5

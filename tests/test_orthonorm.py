@@ -1,0 +1,142 @@
+"""Unit suite for the orthonormalization subsystem (``repro.core.orthonorm``).
+
+Covers the claims the ``orth="cholesky-qr2"`` switch rests on:
+
+  * CholeskyQR2 output is orthonormal to roundoff and spans exactly the
+    input's column space (span parity with Householder QR in f64).
+  * The conditioning guard: near-rank-deficient input trips the pivot
+    test, the Fukaya shift keeps the factorization finite, and within the
+    documented kappa range the result is still orthonormal to roundoff.
+  * Beyond the documented range (a numerically singular V̄) the output
+    stays finite — the documented fallback is ``orth="qr"``, not a crash.
+  * The ``resolve_orth`` / ``orthonormalize`` vocabulary dispatches and
+    validates.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import subspace_dist64
+
+from repro.core.orthonorm import (
+    ORTH_METHODS,
+    cholesky_qr2,
+    cholqr_guard_coeffs,
+    orthonormalize,
+    qr_orthonormalize,
+    resolve_orth,
+)
+
+
+def _with_spectrum(seed, d, s):
+    """V = U diag(s) W^T with orthonormal U (d, r), orthogonal W (r, r)."""
+    r = len(s)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    u = jnp.linalg.qr(jax.random.normal(k1, (d, r)))[0]
+    w = jnp.linalg.qr(jax.random.normal(k2, (r, r)))[0]
+    return (u * jnp.asarray(s, jnp.float32)) @ w.T
+
+
+WELL = [1.0, 0.9, 0.7, 0.5, 0.3]
+# kappa ~ 2e2: inside CholeskyQR2's f32 working range (~3e3), but far
+# enough out that a single CholeskyQR pass would lose ~eps*kappa^2 ~ 5e-3.
+NEAR_DEFICIENT = [1.0, 0.8, 0.5, 0.1, 5e-3]
+# kappa ~ 1e4: past the f32 range; the pivot guard must kick in.
+PAST_RANGE = [1.0, 0.8, 0.5, 0.1, 1e-4]
+
+
+@pytest.mark.parametrize(
+    "spectrum", [WELL, NEAR_DEFICIENT], ids=["well", "near-deficient"]
+)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_cholesky_qr2_orthonormal_and_span(spectrum, seed):
+    v = _with_spectrum(seed, 300, spectrum)
+    q = cholesky_qr2(v)
+    r = len(spectrum)
+    np.testing.assert_allclose(
+        np.asarray(q.T @ q), np.eye(r), atol=2e-5
+    )
+    assert subspace_dist64(q, np.asarray(v, np.float64)) <= 1e-5
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_cholesky_qr2_matches_householder_qr(seed):
+    v = _with_spectrum(seed, 257, WELL)
+    assert subspace_dist64(cholesky_qr2(v), qr_orthonormalize(v)) <= 1e-5
+
+
+def test_guard_fires_on_rank_deficient():
+    """A numerically singular V̄ trips the pivot test; the shifted
+    factorization keeps everything finite (the documented guard)."""
+    v = _with_spectrum(3, 200, PAST_RANGE)
+    d, r = v.shape
+    eps = float(jnp.finfo(jnp.float32).eps)
+    pivot_c, _ = cholqr_guard_coeffs(d, r, eps)
+    s = np.asarray(v.T @ v, np.float64)
+    # The construction really is past the guard threshold.
+    assert np.linalg.eigvalsh(s).min() < pivot_c * np.trace(s)
+    q = cholesky_qr2(v)
+    assert bool(jnp.all(jnp.isfinite(q)))
+    # The well-separated directions are still recovered: restrict the span
+    # comparison to the top r-1 (the killed direction is unrecoverable).
+    top = qr_orthonormalize(v)[:, : r - 1]
+    g = np.asarray(top).T @ np.asarray(q)
+    c = np.linalg.svd(g, compute_uv=False)
+    assert c.min() > 1.0 - 1e-4  # top directions inside span(q)
+
+
+def test_exactly_singular_stays_finite():
+    u = jax.random.normal(jax.random.PRNGKey(0), (150, 4))
+    v = jnp.concatenate([u, u[:, :1]], axis=1)  # rank 4, 5 columns
+    q = cholesky_qr2(v)
+    assert bool(jnp.all(jnp.isfinite(q)))
+
+
+def test_f64_supported():
+    v = jnp.asarray(np.random.default_rng(0).normal(size=(120, 6)))
+    assert v.dtype == jnp.float64 or v.dtype == jnp.float32  # x64 flag-dependent
+    q = cholesky_qr2(v)
+    assert q.dtype == v.dtype
+    np.testing.assert_allclose(
+        np.asarray(q.T @ q), np.eye(6),
+        atol=1e-12 if v.dtype == jnp.float64 else 2e-5,
+    )
+
+
+def test_batched_input():
+    vs = jnp.stack([_with_spectrum(s, 90, WELL) for s in range(3)])
+    qs = cholesky_qr2(vs)
+    assert qs.shape == vs.shape
+    for q in qs:
+        np.testing.assert_allclose(
+            np.asarray(q.T @ q), np.eye(5), atol=2e-5
+        )
+
+
+def test_jaxpr_has_no_householder_and_no_svd():
+    v = _with_spectrum(0, 64, WELL)
+    text = str(jax.make_jaxpr(cholesky_qr2)(v))
+    assert "geqrf" not in text and "householder" not in text
+    assert "svd" not in text
+    assert "cholesky" in text and "triangular_solve" in text
+
+
+def test_vocabulary():
+    assert resolve_orth("qr") == "qr"
+    assert resolve_orth("cholesky-qr2") == "cholesky-qr2"
+    assert set(ORTH_METHODS) == {"qr", "cholesky-qr2"}
+    with pytest.raises(ValueError):
+        resolve_orth("cholesky")  # the single-pass spelling is not a method
+    v = _with_spectrum(1, 80, WELL)
+    np.testing.assert_allclose(
+        np.asarray(orthonormalize(v, orth="qr")),
+        np.asarray(qr_orthonormalize(v)),
+        atol=0,
+    )
+    np.testing.assert_allclose(
+        np.asarray(orthonormalize(v, orth="cholesky-qr2")),
+        np.asarray(cholesky_qr2(v)),
+        atol=0,
+    )
