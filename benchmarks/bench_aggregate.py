@@ -1,28 +1,32 @@
 """Aggregation-path benchmark: the repo's recorded perf trajectory.
 
 Sweeps (m, d, r) x backend ("xla" | "pallas") x polar ("svd" |
-"newton-schulz") x orth ("qr" | "cholesky-qr2") x topology ("stacked" |
-"collective") through the public aggregation API and writes
-``BENCH_aggregate.json`` — a schema ``benchmarks/run.py`` can pretty-print
-(``--show-aggregate``), diff across PRs (``--diff-aggregate old new``), and
-gate (``--check-aggregate old new``: >25% machine-calibrated same-mode
-median slowdown on any matching cell fails; see ``check``), so every PR
-leaves a comparable datapoint.  The
-(pallas, newton-schulz, cholesky-qr2) cells are the fused single-launch
-rounds.
+"newton-schulz") x orth ("qr" | "cholesky-qr2") x layout/comm (below)
+through the public aggregation API and writes ``BENCH_aggregate.json`` —
+a schema ``benchmarks/run.py`` can pretty-print (``--show-aggregate``),
+diff across PRs (``--diff-aggregate old new``), and gate
+(``--check-aggregate old new``: >25% machine-calibrated same-mode median
+slowdown on any matching cell fails; see ``check``), so every PR leaves a
+comparable datapoint.  The (pallas, newton-schulz, cholesky-qr2) cells
+are the fused single-launch rounds.
 
-Topologies:
+Record layout axes:
 
-  * "stacked"    — the coordinator form: ``iterative_refinement`` on a
-                   host-stacked (m, d, r) array (what the paper's
-                   coordinator runs; exercises the Pallas kernels directly).
-  * "collective" — ``procrustes_average_collective`` under ``shard_map``
-                   over the host mesh's data axis (the production topology;
-                   recorded only when more than one device is visible,
-                   since a 1-device mesh measures nothing distributed —
-                   run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
-                   to record it on a 1-CPU host, as the CI bench-smoke
-                   lane does).
+  * ``topology`` ("stacked" | "collective") — where the stack lives:
+      "stacked"    — ``iterative_refinement`` on a host-stacked (m, d, r)
+                     array (what the paper's coordinator runs; exercises
+                     the Pallas kernels directly).
+      "collective" — ``procrustes_average_collective`` under ``shard_map``
+                     over the host mesh's data axis (the production
+                     setting; recorded only when more than one device is
+                     visible — run under
+                     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+                     to record it on a 1-CPU host, as the CI bench-smoke
+                     lane does).
+  * ``comm`` — the *communication topology* of a collective cell
+      ("psum" | "gather" | "ring", the ``repro.comm`` registry; "-" on
+      stacked cells, which do no communication).  Since PR 4 this is an
+      explicit switch, independent of ``backend``.
 
 Timing discipline: jit + one warm-up call (compile time recorded
 separately), then ``reps`` timed calls each ending in
@@ -35,7 +39,8 @@ compare across modes.
 Run:  PYTHONPATH=src python -m benchmarks.bench_aggregate \
           [--tiny] [--out BENCH_aggregate.json] [--reps 5] [--n-iter 2]
           [--backends xla,pallas] [--polars svd,newton-schulz]
-          [--orths qr,cholesky-qr2] [--shapes 8x1024x16,16x2048x32]
+          [--orths qr,cholesky-qr2] [--comms psum,gather,ring]
+          [--shapes 8x1024x16,16x2048x32]
 """
 
 from __future__ import annotations
@@ -49,12 +54,19 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
-SCHEMA = "bench_aggregate/v2"
-# v1 predates the ``orth=`` switch; ``load`` upgrades it (orth="qr").
+SCHEMA = "bench_aggregate/v3"
+# v1 predates the ``orth=`` switch (upgraded with orth="qr"); v2 predates
+# the ``comm`` communication-topology axis (upgraded with the historical
+# backend pairing).  ``load`` upgrades both.
 SCHEMA_V1 = "bench_aggregate/v1"
+SCHEMA_V2 = "bench_aggregate/v2"
 
 # Record keys that identify a configuration (the diff/check join key).
-KEY_FIELDS = ("topology", "backend", "polar", "orth", "m", "d", "r", "n_iter")
+KEY_FIELDS = (
+    "topology", "comm", "backend", "polar", "orth", "m", "d", "r", "n_iter"
+)
+
+DEFAULT_COMMS = ("psum", "gather", "ring")
 
 DEFAULT_SHAPES = ((8, 1024, 16), (16, 2048, 32), (8, 4096, 64))
 TINY_SHAPES = ((4, 128, 4), (2, 96, 8))
@@ -91,10 +103,15 @@ def _time_fn(fn, arg, reps: int) -> Dict[str, float]:
     }
 
 
-def _mode(backend: str) -> str:
+def _mode(backend: str, comm: str = "-") -> str:
     from repro.kernels.ops import on_tpu
 
     if backend != "pallas":
+        return "compiled"
+    if comm == "ring":
+        # The ring schedule's hop compute is plain XLA (no stacked operand
+        # for the kernels to stream — see repro.comm.ring), so off-TPU it
+        # still runs compiled, not interpreted.
         return "compiled"
     return "compiled" if on_tpu() else "interpret"
 
@@ -105,9 +122,12 @@ def bench_stacked(shapes, backends, polars, orths, *, n_iter: int, reps: int):
     records = []
     for m, d, r in shapes:
         vs = _stack(m, d, r)
-        for backend in backends:
-            for polar in polars:
-                for orth in orths:
+        # Backend innermost: consecutive cells belong to different
+        # (topology, comm, backend) gate groups, so a transient noisy-
+        # neighbor episode cannot poison a whole group (see ``check``).
+        for polar in polars:
+            for orth in orths:
+                for backend in backends:
                     fn = jax.jit(
                         lambda v, b=backend, p=polar, o=orth:
                         iterative_refinement(
@@ -115,7 +135,8 @@ def bench_stacked(shapes, backends, polars, orths, *, n_iter: int, reps: int):
                         )
                     )
                     rec = {
-                        "topology": "stacked", "backend": backend,
+                        "topology": "stacked", "comm": "-",
+                        "backend": backend,
                         "polar": polar, "orth": orth,
                         "m": m, "d": d, "r": r, "n_iter": n_iter,
                         "mode": _mode(backend),
@@ -130,65 +151,82 @@ def bench_stacked(shapes, backends, polars, orths, *, n_iter: int, reps: int):
     return records
 
 
-def bench_collective(shapes, backends, polars, orths, *, n_iter: int, reps: int):
-    """The shard_map topology over the host devices (m := device count)."""
+def bench_collective(
+    shapes, backends, polars, orths, comms, *, n_iter: int, reps: int
+):
+    """The shard_map setting over the host devices (m := device count),
+    per registered communication topology (``repro.comm``)."""
     from repro.compat import make_mesh, shard_map
     from repro.core.distributed import procrustes_average_collective
     from jax.sharding import PartitionSpec as P
 
     n_dev = len(jax.devices())
     if n_dev < 2:
-        print("# collective topology skipped: single-device host "
+        print("# collective cells skipped: single-device host "
               "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
         return []
     mesh = make_mesh((n_dev,), ("data",))
     records = []
     for _, d, r in shapes:
         vs = _stack(n_dev, d, r)
-        for backend in backends:
-            for polar in polars:
-                for orth in orths:
-
-                    def shard_fn(v, b=backend, p=polar, o=orth):
-                        out = procrustes_average_collective(
-                            v[0], axis_name="data", n_iter=n_iter,
-                            backend=b, polar=p, orth=o,
-                        )
-                        return out[None]
-
-                    fn = jax.jit(
-                        shard_map(
-                            shard_fn, mesh=mesh,
-                            in_specs=P("data", None, None),
-                            out_specs=P("data", None, None), check_vma=False,
-                        )
+        # comm/backend innermost — same decorrelation rationale as
+        # ``bench_stacked``: the cells of one gate group are spread across
+        # the sweep instead of running back to back.
+        for polar in polars:
+            for orth in orths:
+                for comm in comms:
+                    # The ring's hop compute ignores backend= entirely
+                    # (repro.comm.ring), so sweeping both backends would
+                    # time the same compiled program twice.
+                    cell_backends = (
+                        ("xla",) if comm == "ring" and "xla" in backends
+                        else backends[:1] if comm == "ring"
+                        else backends
                     )
-                    rec = {
-                        "topology": "collective", "backend": backend,
-                        "polar": polar, "orth": orth, "m": n_dev,
-                        "d": d, "r": r,
-                        "n_iter": n_iter, "mode": _mode(backend),
-                    }
-                    rec.update(_time_fn(fn, vs, reps))
-                    records.append(rec)
-                    print(
-                        f"collective m={n_dev} d={d} r={r} "
-                        f"{backend}/{polar}/{orth} "
-                        f"[{rec['mode']}]: {rec['wall_us']:.1f}us"
-                    )
+                    for backend in cell_backends:
+
+                        def shard_fn(v, b=backend, p=polar, o=orth, t=comm):
+                            out = procrustes_average_collective(
+                                v[0], axis_name="data", n_iter=n_iter,
+                                backend=b, polar=p, orth=o, topology=t,
+                            )
+                            return out[None]
+
+                        fn = jax.jit(
+                            shard_map(
+                                shard_fn, mesh=mesh,
+                                in_specs=P("data", None, None),
+                                out_specs=P("data", None, None),
+                                check_vma=False,
+                            )
+                        )
+                        rec = {
+                            "topology": "collective", "comm": comm,
+                            "backend": backend,
+                            "polar": polar, "orth": orth, "m": n_dev,
+                            "d": d, "r": r,
+                            "n_iter": n_iter, "mode": _mode(backend, comm),
+                        }
+                        rec.update(_time_fn(fn, vs, reps))
+                        records.append(rec)
+                        print(
+                            f"collective/{comm} m={n_dev} d={d} r={r} "
+                            f"{backend}/{polar}/{orth} "
+                            f"[{rec['mode']}]: {rec['wall_us']:.1f}us"
+                        )
     return records
 
 
 def run_sweep(
     *, shapes=DEFAULT_SHAPES, backends=("xla", "pallas"),
     polars=("svd", "newton-schulz"), orths=("qr", "cholesky-qr2"),
-    n_iter: int = 2, reps: int = 5,
+    comms=DEFAULT_COMMS, n_iter: int = 2, reps: int = 5,
 ) -> dict:
     records = bench_stacked(
         shapes, backends, polars, orths, n_iter=n_iter, reps=reps
     )
     records += bench_collective(
-        shapes, backends, polars, orths, n_iter=n_iter, reps=reps
+        shapes, backends, polars, orths, comms, n_iter=n_iter, reps=reps
     )
     return {
         "schema": SCHEMA,
@@ -213,6 +251,18 @@ def load(path: str) -> dict:
         # v1 predates the ``orth=`` switch; every v1 record ran thin QR.
         for rec in doc.get("records", []):
             rec.setdefault("orth", "qr")
+        doc["schema"] = SCHEMA_V2
+    if doc.get("schema") == SCHEMA_V2:
+        # v2 predates the explicit ``comm`` axis: collective cells used the
+        # historical backend pairing (gather under pallas, psum under xla);
+        # stacked cells do no communication.
+        for rec in doc.get("records", []):
+            if "comm" not in rec:
+                rec["comm"] = (
+                    "-" if rec.get("topology") == "stacked"
+                    else ("gather" if rec.get("backend") == "pallas"
+                          else "psum")
+                )
         doc["schema"] = SCHEMA
     if doc.get("schema") != SCHEMA:
         raise ValueError(
@@ -231,13 +281,13 @@ def pretty_print(doc: dict) -> None:
         f"# {SCHEMA} | jax {meta.get('jax')} on {meta.get('platform')} "
         f"x{meta.get('device_count')} | {meta.get('timestamp')}"
     )
-    hdr = ("topology", "backend", "polar", "orth", "m", "d", "r", "n_iter",
-           "mode", "wall_us", "compile_s")
+    hdr = ("topology", "comm", "backend", "polar", "orth", "m", "d", "r",
+           "n_iter", "mode", "wall_us", "compile_s")
     print(",".join(hdr))
     for rec in sorted(doc["records"], key=_key):
         print(
-            f"{rec['topology']},{rec['backend']},{rec['polar']},"
-            f"{rec['orth']},"
+            f"{rec['topology']},{rec['comm']},{rec['backend']},"
+            f"{rec['polar']},{rec['orth']},"
             f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
             f"{rec['mode']},{rec['wall_us']:.1f},{rec['compile_s']:.2f}"
         )
@@ -257,7 +307,7 @@ def diff(old: dict, new: dict) -> None:
             f"({p_old!r} vs {p_new!r}); wall times are not comparable"
         )
     olds = {_key(r): r for r in old["records"]}
-    print("topology,backend,polar,orth,m,d,r,n_iter,old_us,new_us,ratio")
+    print("topology,comm,backend,polar,orth,m,d,r,n_iter,old_us,new_us,ratio")
     for rec in sorted(new["records"], key=_key):
         prev = olds.get(_key(rec))
         if prev is None:
@@ -268,36 +318,57 @@ def diff(old: dict, new: dict) -> None:
             status = f"{rec['wall_us'] / max(prev['wall_us'], 1e-9):.3f}"
         old_us = f"{prev['wall_us']:.1f}" if prev else "-"
         print(
-            f"{rec['topology']},{rec['backend']},{rec['polar']},"
-            f"{rec['orth']},"
+            f"{rec['topology']},{rec['comm']},{rec['backend']},"
+            f"{rec['polar']},{rec['orth']},"
             f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
             f"{old_us},{rec['wall_us']:.1f},{status}"
         )
 
 
 def check(
-    old: dict, new: dict, *, threshold: float = 1.25, calibrate: bool = True
+    old: dict, new: dict, *, threshold: float = 1.25, calibrate: bool = True,
+    cell_threshold: float = 5.0, cell_floor_us: float = 1000.0,
 ) -> tuple:
     """Same-mode regression gate: the PR-blocking form of ``diff``.
 
     Joins matching-key cells whose recorded ``mode`` agrees
     (compiled-vs-compiled or interpret-vs-interpret; a mode flip is a path
-    change, not a perf regression) and flags those whose new/old median
-    ratio exceeds ``threshold``.  Cross-platform sweeps are refused
+    change, not a perf regression).  Cross-platform sweeps are refused
     outright, like ``diff``.
 
-    ``calibrate=True`` divides every cell's ratio by the *median* ratio
-    across the matched cells first.  The baseline is committed from
-    whatever machine recorded it, and CI runs on a different one — a
-    uniformly slower runner shifts every ratio by the same factor, which
-    is machine speed, not a regression.  Calibration cancels that factor
-    and keeps the gate sensitive to the signal that matters: one path
-    getting slower *relative to the others*.  The cost is deliberate:
-    a change that slows every single cell by the same factor is invisible
-    (run ``calibrate=False`` on same-machine sweeps to see it).
+    Robustness design — the gate must hold on noisy shared runners:
 
-    Returns ``(regressions, checked)``: the offending cells (each carrying
-    ``old_us``, raw ``ratio``, and ``cal_ratio``) and the number of cells
+    * **min-of-reps.**  Per-cell ratios compare ``wall_us_min``, not the
+      median: scheduler contention only ever *inflates* a wall time, so
+      the minimum is the least-noise estimate of what the path costs.
+    * **per-population calibration.**  ``calibrate=True`` divides every
+      ratio by the median ratio across the matched cells of the same
+      ``topology`` ("stacked" | "collective"): the committed baseline and
+      the CI runner are different machines, and machine speed is not a
+      regression.  The two populations are calibrated separately because
+      they have different noise regimes — the collective cells run a
+      multi-process shard_map whose scheduling cost swings together and
+      independently of the single-process stacked cells, so a global
+      median would misread one population's lucky run as the other's
+      regression.  The deliberate blind spot (same class the global
+      calibration had): a change slowing every cell of a population by
+      the same factor is invisible — run ``calibrate=False`` on
+      same-machine sweeps to see it.
+    * **group verdicts.**  The primary verdict is per *path group*
+      (topology, comm, backend) — the unit a code change actually moves —
+      using the median calibrated ratio of the group's cells (polar /
+      orth / shape variants).  A noisy-neighbor episode hits a few
+      arbitrary cells; a real path regression moves its whole group.
+      The sweeps interleave groups (backend/comm innermost) so one noise
+      episode cannot hit all of a group's cells back to back.
+    * **cell blowups.**  Narrow single-cell regressions are still caught,
+      at a loose ``cell_threshold`` (default 5x) and only for cells at or
+      above ``cell_floor_us`` in both sweeps — sub-millisecond cells
+      measure launch jitter, not path cost.
+
+    Returns ``(regressions, checked)``: offending entries (group entries
+    carry ``group`` + ``cal_ratio`` + ``cells``; cell entries the record
+    fields + ``old_us``/``ratio``/``cal_ratio``) and the number of cells
     compared.  Empty list == gate green.
     """
     p_old = old.get("meta", {}).get("platform")
@@ -313,17 +384,32 @@ def check(
         prev = olds.get(_key(rec))
         if prev is None or prev.get("mode") != rec.get("mode"):
             continue
-        ratio = rec["wall_us"] / max(prev["wall_us"], 1e-9)
-        matched.append((rec, prev, ratio))
-    norm = (
-        statistics.median(r for _, _, r in matched)
-        if calibrate and len(matched) >= 2 else 1.0
-    )
+        t_new = rec.get("wall_us_min", rec["wall_us"])
+        t_old = prev.get("wall_us_min", prev["wall_us"])
+        matched.append((rec, prev, t_new / max(t_old, 1e-9)))
+    by_pop: dict = {}
+    for rec, _, ratio in matched:
+        by_pop.setdefault(rec["topology"], []).append(ratio)
+    norms = {
+        pop: (statistics.median(rs) if calibrate and len(rs) >= 2 else 1.0)
+        for pop, rs in by_pop.items()
+    }
+    groups: dict = {}
+    for rec, prev, ratio in matched:
+        g = (rec["topology"], rec["comm"], rec["backend"])
+        groups.setdefault(g, []).append(ratio / norms[rec["topology"]])
     regressions = [
-        {**rec, "old_us": prev["wall_us"], "ratio": ratio,
-         "cal_ratio": ratio / norm}
+        {"group": g, "cal_ratio": statistics.median(rs), "cells": len(rs)}
+        for g, rs in sorted(groups.items())
+        if statistics.median(rs) > threshold
+    ]
+    regressions += [
+        {**rec, "old_us": prev.get("wall_us_min", prev["wall_us"]),
+         "ratio": ratio, "cal_ratio": ratio / norms[rec["topology"]]}
         for rec, prev, ratio in matched
-        if ratio / norm > threshold
+        if ratio / norms[rec["topology"]] > cell_threshold
+        and prev.get("wall_us_min", prev["wall_us"]) >= cell_floor_us
+        and rec.get("wall_us_min", rec["wall_us"]) >= cell_floor_us
     ]
     return regressions, len(matched)
 
@@ -338,6 +424,9 @@ def main() -> None:
     ap.add_argument("--backends", default="xla,pallas")
     ap.add_argument("--polars", default="svd,newton-schulz")
     ap.add_argument("--orths", default="qr,cholesky-qr2")
+    ap.add_argument("--comms", default=",".join(DEFAULT_COMMS),
+                    help="communication topologies for the collective "
+                         "cells (repro.comm registry)")
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--n-iter", type=int, default=2)
     args = ap.parse_args()
@@ -351,6 +440,7 @@ def main() -> None:
         backends=tuple(args.backends.split(",")),
         polars=tuple(args.polars.split(",")),
         orths=tuple(args.orths.split(",")),
+        comms=tuple(args.comms.split(",")),
         n_iter=args.n_iter,
         reps=args.reps,
     )

@@ -1,74 +1,156 @@
-"""Communication-cost table for the paper's one-shot claim (Section 2.1 /
-Remark 2), quantified on the real mesh mapping.
+"""Communication-cost table + measured HLO check for the topology registry.
 
-Counts the words each topology moves per estimation round:
-  * coordinator-gather (paper's presentation): m * d * r in + d * r out
-  * our collective mapping: 2 all-reduces of d * r (broadcast-ref + average)
-  * Fan et al. projector averaging: d * d all-reduce (projector), or
-    T orthogonal-iteration rounds of d * r each + central eigh
-and verifies the measured collective bytes of the compiled distributed-PCA
-job against the analytic 2*d*r prediction (parsed from HLO).
+The analytic words-per-round model lives in ``repro.comm`` (one home —
+``repro.launch.dryrun`` consumes the same functions); this module renders
+it as the paper-narrative table (Section 2.1 / Remark 2 quantified per
+registered topology) and *verifies* it: ``comm_measured`` compiles the
+distributed-PCA job per topology on a forced-8-device host and asserts the
+HLO collective-bytes breakdown (``repro.launch.hlo_analysis``) equals the
+model's prediction, byte for byte.  CI's bench-smoke lane runs
+``python -m benchmarks.bench_comm --check`` so a topology regression (a
+stray all-gather on the ring path, a reintroduced axis-size all-reduce on
+psum) fails the build.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import argparse
+import json
+import os
+import subprocess
+import sys
 
 from benchmarks.common import emit
 
+MEASURE_N_ITERS = (1, 2)  # n_iter values measured per topology
+
 
 def comm_table():
+    from repro.comm import (
+        TOPOLOGIES,
+        comm_cost,
+        fan_projector_words,
+        paper_coordinator_words,
+    )
+
     for d, r, m in ((1024, 32, 16), (8192, 128, 256)):
-        gather = m * d * r + d * r
-        ours = 2 * d * r
-        fan_projector = d * d
+        words = {t: comm_cost(t, m=m, d=d, r=r).words for t in TOPOLOGIES}
+        coordinator = paper_coordinator_words(m, d, r)
+        fan = fan_projector_words(d)
         emit(
             f"comm[d={d},r={r},m={m}]",
             0.0,
-            f"coordinator_words={gather};ours_words={ours};"
-            f"fan_projector_words={fan_projector};"
-            f"reduction_vs_gather={gather/ours:.0f}x;"
-            f"reduction_vs_fan={fan_projector/ours:.0f}x",
+            f"coordinator_words={coordinator};"
+            f"psum_words={words['psum']};gather_words={words['gather']};"
+            f"ring_words={words['ring']};fan_projector_words={fan};"
+            f"psum_reduction_vs_coordinator={coordinator / words['psum']:.0f}x;"
+            f"psum_reduction_vs_fan={fan / words['psum']:.0f}x",
         )
 
 
-def comm_measured():
-    """Compile the distributed PCA job on an 8-device mesh and check the
-    HLO collective bytes match the 2*d*r (+refinement) prediction."""
-    import subprocess
-    import sys
-    import os
+def comm_measured(*, check: bool = False) -> bool:
+    """Compile the distributed-PCA job per (topology, n_iter) on an
+    8-device mesh and check the HLO collective bytes equal the
+    ``repro.comm.comm_cost`` prediction.  Returns True iff every cell
+    matches; with ``check=True`` a mismatch also raises."""
+    from repro.comm import TOPOLOGIES, comm_cost
 
-    code = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    d, r, n, m = 512, 16, 256, 8
+    code = f"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={m}"
 import jax, jax.numpy as jnp
 from repro import compat
 from repro.core.distributed import distributed_pca
 from repro.launch.hlo_analysis import collective_bytes
-mesh = compat.make_mesh((8,), ("data",))
-d, r, n = 512, 16, 256
-samples = jax.ShapeDtypeStruct((8 * n, d), jnp.float32)
-fn = jax.jit(lambda s: distributed_pca(s, mesh, r, n_iter=1))
-c = fn.lower(samples).compile()
-cb = collective_bytes(c.as_text())
-print("AR", cb["all-reduce"], "AG", cb["all-gather"])
+mesh = compat.make_mesh(({m},), ("data",))
+d, r, n = {d}, {r}, {n}
+samples = jax.ShapeDtypeStruct(({m} * n, d), jnp.float32)
+for topology in {list(TOPOLOGIES)!r}:
+    for n_iter in {list(MEASURE_N_ITERS)!r}:
+        fn = jax.jit(lambda s, t=topology, k=n_iter: distributed_pca(
+            s, mesh, r, n_iter=k, topology=t))
+        cb = collective_bytes(fn.lower(samples).compile().as_text())
+        print("CELL", json.dumps({{"topology": topology, "n_iter": n_iter,
+                                   "measured": {{k: v for k, v in cb.items() if v}}}}))
 """
     env = dict(os.environ)
-    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    src = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+    )
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     out = subprocess.run(
         [sys.executable, "-c", code], env=env, capture_output=True, text=True,
-        timeout=600,
+        timeout=900,
     )
-    line = [l for l in out.stdout.splitlines() if l.startswith("AR")][-1]
-    ar = int(line.split()[1])
-    d, r = 512, 16
-    predicted = 2 * d * r * 4 + 4  # two f32 d*r all-reduces + the size psum
-    emit(
-        "comm_measured[d=512,r=16,m=8]",
-        0.0,
-        f"all_reduce_bytes={ar};predicted={predicted};"
-        f"ratio={ar/max(predicted,1):.2f}",
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"comm_measured subprocess failed:\n{out.stderr[-4000:]}"
+        )
+    cells = [
+        json.loads(line[5:])
+        for line in out.stdout.splitlines()
+        if line.startswith("CELL ")
+    ]
+    expected = len(TOPOLOGIES) * len(MEASURE_N_ITERS)
+    if len(cells) != expected:
+        # Fail closed: a format drift that yields zero parseable cells must
+        # not report "verified".
+        raise RuntimeError(
+            f"comm_measured parsed {len(cells)} cells, expected {expected};"
+            f"\nstdout was:\n{out.stdout[-2000:]}"
+        )
+    ok_all = True
+    for cell in cells:
+        topology, n_iter = cell["topology"], cell["n_iter"]
+        predicted = {
+            k: 4 * v  # f32 words -> bytes
+            for k, v in comm_cost(
+                topology, m=m, d=d, r=r, n_iter=n_iter
+            ).hlo_words.items()
+            if v
+        }
+        # The driver's final ``stacked[0]`` replicates shard 0's answer to
+        # every device — one d*r all-reduce the outer jit emits regardless
+        # of topology.  A harness term, not part of the schedule, so it is
+        # added here rather than in the ``repro.comm`` model.
+        predicted["all-reduce"] = predicted.get("all-reduce", 0) + 4 * d * r
+        ok = cell["measured"] == predicted
+        ok_all &= ok
+        emit(
+            f"comm_measured[{topology},d={d},r={r},m={m},n_iter={n_iter}]",
+            0.0,
+            f"measured={json.dumps(cell['measured'], sort_keys=True)};"
+            f"predicted={json.dumps(predicted, sort_keys=True)};"
+            f"match={'yes' if ok else 'NO'}",
+        )
+        if check and not ok:
+            raise AssertionError(
+                f"topology {topology!r} (n_iter={n_iter}): measured HLO "
+                f"collective bytes {cell['measured']} != model {predicted}"
+            )
+    return ok_all
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--check", action="store_true",
+        help="exit non-zero unless every topology's compiled HLO "
+             "collective bytes equal the repro.comm cost model (the CI "
+             "bench-smoke gate)",
     )
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    comm_table()
+    ok = comm_measured(check=args.check)
+    if args.check:
+        print("# comm cost model verified against compiled HLO for all "
+              "topologies")
+        sys.exit(0 if ok else 1)
+    # Without --check this is an informational table: mismatches are
+    # visible as match=NO rows but do not fail the run.
+
+
+if __name__ == "__main__":
+    main()

@@ -50,17 +50,30 @@ def main() -> None:
             bad, checked = A.check(old, new, threshold=args.check_threshold)
             if bad:
                 for r in bad:
-                    print(
-                        f"REGRESSION {r['topology']},{r['backend']},"
-                        f"{r['polar']},{r['orth']},m={r['m']},d={r['d']},"
-                        f"r={r['r']}: {r['old_us']:.1f}us -> "
-                        f"{r['wall_us']:.1f}us ({r['ratio']:.2f}x raw, "
-                        f"{r['cal_ratio']:.2f}x machine-calibrated)",
-                        file=sys.stderr,
-                    )
+                    if "group" in r:
+                        topo, comm, backend = r["group"]
+                        print(
+                            f"REGRESSION group {topo},{comm},{backend}: "
+                            f"median {r['cal_ratio']:.2f}x machine-"
+                            f"calibrated over {r['cells']} cells",
+                            file=sys.stderr,
+                        )
+                    else:
+                        new_us = r.get("wall_us_min", r["wall_us"])
+                        print(
+                            f"REGRESSION cell {r['topology']},{r['comm']},"
+                            f"{r['backend']},"
+                            f"{r['polar']},{r['orth']},m={r['m']},"
+                            f"d={r['d']},"
+                            f"r={r['r']}: {r['old_us']:.1f}us -> "
+                            f"{new_us:.1f}us ({r['ratio']:.2f}x "
+                            f"raw, {r['cal_ratio']:.2f}x "
+                            f"machine-calibrated)",
+                            file=sys.stderr,
+                        )
                 sys.exit(1)
             print(f"# check-aggregate: {checked} matching cells, no "
-                  f"machine-calibrated regression past "
+                  f"machine-calibrated path-group regression past "
                   f"{args.check_threshold:.2f}x")
         return
 

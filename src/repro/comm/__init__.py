@@ -1,0 +1,29 @@
+"""Communication-topology subsystem: how refinement rounds talk.
+
+The paper's one-shot claim is a statement about communication schedules,
+so the schedule is a first-class, *independently selectable* axis here —
+``topology=`` ("psum" | "gather" | "ring" | "auto") is orthogonal to
+``backend=`` (which only selects the compute path).  The registry, the
+analytic words-per-round cost model, and the mesh primitives live in
+``repro.comm.topology``; the overlapped ring schedule in
+``repro.comm.ring``.  ``repro.core.distributed`` dispatches on the
+resolved topology; ``benchmarks/bench_comm.py`` and
+``repro.launch.dryrun`` consume the cost model instead of hand-writing
+the formulas.
+
+This package deliberately depends only on ``jax`` and ``repro.compat`` at
+import time (core/kernels imports are function-level), so it sits below
+``repro.core`` in the layering.
+"""
+
+from repro.comm.topology import (  # noqa: F401
+    TOPOLOGIES,
+    CommCost,
+    axis_size,
+    broadcast_from,
+    comm_cost,
+    fan_projector_words,
+    paper_coordinator_words,
+    resolve_topology,
+)
+from repro.comm.ring import DEFAULT_RING_CHUNK, ring_rounds  # noqa: F401

@@ -1,0 +1,147 @@
+"""Overlapped ring schedule: consume each neighbor's basis as it arrives.
+
+The gather topology pays m·d·r up front and materializes the (m, d, r)
+stack before any round compute starts.  The ring topology interleaves the
+two instead: every shard's (d, r) basis circulates a ``ppermute`` ring in
+d-chunks, and on each of the m-1 hops the receiving shard immediately runs
+that basis's share of the round — Gram against the reference
+(``Vⱼᵀ·ref``, accumulated chunk by chunk as the chunks land), the r x r
+polar, and the aligned accumulation into the running V̄.  Two consequences:
+
+  * **Overlap.**  The hop h+1 ``ppermute`` of a chunk depends only on the
+    hop-h *transfer*, not on the hop-h *compute*, and within a hop chunk
+    c+1's transfer is independent of chunk c's Gram matmul — so XLA's
+    async collective-permute (start/done pairs under the latency-hiding
+    scheduler) runs the wire and the MXU concurrently.  The chunk size is
+    the overlap granularity: smaller chunks pipeline tighter at more
+    per-transfer latency.
+  * **O(d·r) working set.**  A shard ever holds three (d, r) buffers — the
+    circulating basis, the reference, and the running average — so the
+    (m, d, r) stack is *never materialized*.  This is the memory story for
+    large m: the gather topology's stack is m times bigger than the answer.
+
+The per-hop compute is deliberately plain ``jnp`` (chunked tall-skinny
+matmuls + the ``polar=`` method of ``repro.core.procrustes``): there is no
+stacked (m, d, r) operand for the Pallas streaming kernels to win on, and
+(chunk, r) GEMMs are already MXU-native, so ``backend=`` affects only the
+stages outside the ring (e.g. the shard-local covariance).  With
+``polar="newton-schulz"`` the whole hop is matmul-only; ``polar="svd"``
+round-trips an r x r SVD per hop (latency-bound — prefer Newton–Schulz on
+TPU).
+
+Numerics: each shard accumulates the m contributions in its own ring
+order, so unlike the psum topology the result is shard-replicated only up
+to f32 summation-order rounding (~1e-7); the parity suite asserts ≤ 1e-5
+f64 subspace distance against the serial oracle.  Core imports are
+function-level: this module sits below ``repro.core`` in the layering
+(see ``repro.comm``).
+
+Compile-cost trade: the m-1 hops are *unrolled* Python loops, so program
+size and trace/compile time grow O(n_iter · m).  Deliberate — the overlap
+above needs the scheduler to see across hops, and a ``fori_loop`` body
+would wall each transfer off from the previous hop's compute (XLA does
+not software-pipeline collectives across while iterations).  The unroll
+is cheap through the hundreds-of-shards range that the cost table covers;
+for meshes far beyond that, or under ``polar="svd"`` (an r x r SVD *per
+hop*), expect compile time to dominate and prefer the gather topology.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DEFAULT_RING_CHUNK", "ring_rounds"]
+
+# Rows per circulating chunk — the overlap granularity.  Matches the
+# Pallas kernels' default d-block (bk=2048): ~2048*r*4 bytes per transfer
+# keeps per-hop latency amortized while still splitting large-d bases into
+# several in-flight transfers.
+DEFAULT_RING_CHUNK = 2048
+
+
+def _chunk_spans(d: int, chunk: int) -> List[Tuple[int, int]]:
+    """[start, end) row spans tiling d; the last span may be short."""
+    chunk = max(1, min(chunk, d))
+    return [(s, min(s + chunk, d)) for s in range(0, d, chunk)]
+
+
+def _aligned_contribution(chunks, ref_chunks, *, polar: str):
+    """align(V, ref) for a chunked (d, r) basis: chunk-accumulated Gram,
+    one r x r polar, chunked apply.  All f32."""
+    from repro.core.procrustes import polar_factor
+
+    g = sum(c.T @ rc for c, rc in zip(chunks, ref_chunks))
+    z = polar_factor(g, polar=polar)
+    return [c @ z for c in chunks]
+
+
+def ring_rounds(
+    v_local: jax.Array,
+    ref: jax.Array | None = None,
+    *,
+    axis_name: str,
+    n_iter: int = 1,
+    polar: str = "svd",
+    orth: str = "qr",
+    chunk: int = DEFAULT_RING_CHUNK,
+) -> jax.Array:
+    """``n_iter`` Algorithm-1 rounds over a mesh axis via the ring schedule.
+
+    Args:
+      v_local: (d, r) local basis on each shard of ``axis_name``.
+      ref: optional (d, r) reference; defaults to shard 0's basis via one
+        d·r broadcast (the paper's choice).
+      n_iter: refinement rounds; each costs (m-1)·d·r ring-hop words.
+      polar / orth: round methods, as everywhere (validated up front).
+      chunk: rows per circulating chunk; need not divide d.
+
+    Returns the (d, r) round output in ``v_local.dtype`` (replicated up to
+    the summation-order rounding discussed in the module docstring).
+    """
+    from repro.comm.topology import axis_size, broadcast_from
+    from repro.core.orthonorm import orthonormalize, resolve_orth
+    from repro.core.procrustes import resolve_polar
+
+    resolve_polar(polar)
+    resolve_orth(orth)
+    m = axis_size(axis_name)
+    if ref is None:
+        ref = broadcast_from(v_local, axis_name, src=0)
+    out = ref
+    for _ in range(max(n_iter, 1)):
+        vbar = _ring_round(
+            v_local, out, axis_name=axis_name, m=m, polar=polar, chunk=chunk
+        )
+        out = orthonormalize(vbar, orth=orth).astype(v_local.dtype)
+    return out
+
+
+def _ring_round(
+    v_local: jax.Array,
+    ref: jax.Array,
+    *,
+    axis_name: str,
+    m: int,
+    polar: str,
+    chunk: int,
+) -> jax.Array:
+    """One round: circulate the bases m-1 hops, aligning each arrival."""
+    d = v_local.shape[0]
+    spans = _chunk_spans(d, chunk)
+    ref_c = [ref[s:e].astype(jnp.float32) for s, e in spans]
+    buf_c = [v_local[s:e].astype(jnp.float32) for s, e in spans]
+    perm = [(i, (i + 1) % m) for i in range(m)]
+
+    acc_c = _aligned_contribution(buf_c, ref_c, polar=polar)  # own basis
+    for _ in range(m - 1):
+        # Receive the left neighbor's basis chunk by chunk; the Gram of
+        # chunk c can start as soon as chunk c lands, overlapping the
+        # remaining transfers (and the next hop overlaps this hop's apply).
+        buf_c = [jax.lax.ppermute(c, axis_name, perm) for c in buf_c]
+        contrib = _aligned_contribution(buf_c, ref_c, polar=polar)
+        acc_c = [a + c for a, c in zip(acc_c, contrib)]
+    vbar = acc_c[0] if len(acc_c) == 1 else jnp.concatenate(acc_c, axis=0)
+    return vbar / m

@@ -1,0 +1,167 @@
+"""Topology registry, mesh primitives, and the words-per-round cost model.
+
+A *topology* is the communication schedule a refinement round runs over a
+mesh axis; it is independent of ``backend=`` (which picks the compute
+path).  Three are registered:
+
+  * ``"psum"``   — broadcast shard 0's basis as the reference (one d·r
+                   all-reduce), solve the r x r Procrustes problem locally
+                   on every shard, then one psum of the aligned bases plus
+                   a replicated orthonormalization.  One d·r all-reduce per
+                   round after the broadcast.
+  * ``"gather"`` — the paper's coordinator form, replicated: one all-gather
+                   of the m local bases per shard, then the stacked
+                   Algorithm 1/2 rounds run communication-free on the
+                   (m, d, r) stack (``repro.core.eigenspace``, any
+                   backend).  Pays m·d·r once; materializes the stack.
+  * ``"ring"``   — the overlapped schedule (``repro.comm.ring``): the
+                   bases circulate a ppermute ring in d-chunks and each
+                   shard consumes its neighbor's basis the hop it arrives
+                   (Gram against the reference, align, accumulate into the
+                   running V̄).  Communication overlaps the Gram phase and
+                   the (m, d, r) stack is never materialized — O(d·r)
+                   working set instead of the gather's O(m·d·r).
+
+``"auto"`` resolves against the *resolved* backend to the pre-topology-
+subsystem pairing (gather under the pallas kernels, psum under XLA), so
+callers that never pass ``topology=`` keep their exact old schedule.
+
+Cost-model conventions (shared by ``benchmarks/bench_comm.py``, the
+bench-smoke CI check, and ``repro.launch.dryrun`` — do not re-derive these
+inline):
+
+  * ``CommCost.words`` counts *logical collective payload words per
+    estimation*: an all-reduce or broadcast of a (d, r) basis counts d·r,
+    a gather of m bases counts m·d·r, and each ring hop counts d·r.  This
+    is the paper's own accounting (Section 2.1 / Remark 2) and what the
+    comm table prints.
+  * ``CommCost.hlo_words`` breaks the same schedule down by HLO collective
+    kind in *operand words per device* — exactly what
+    ``repro.launch.hlo_analysis.collective_bytes`` measures on the
+    partitioned module (multiply by 4 for f32 bytes).  The measured check
+    in ``bench_comm.comm_measured`` asserts compiled HLO against this.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import axis_size as _compat_axis_size
+
+__all__ = [
+    "TOPOLOGIES",
+    "resolve_topology",
+    "axis_size",
+    "broadcast_from",
+    "CommCost",
+    "comm_cost",
+    "paper_coordinator_words",
+    "fan_projector_words",
+]
+
+TOPOLOGIES = ("psum", "gather", "ring")
+
+
+def resolve_topology(topology: str, backend: str = "xla") -> str:
+    """Resolve a ``topology=`` switch to a concrete registry entry.
+
+    ``"auto"`` keeps the historical backend pairing — "gather" when the
+    resolved backend is "pallas" (the kernels run on the gathered stack),
+    "psum" otherwise — so the topology axis is opt-in.  Any explicit
+    topology is honoured under any backend.
+    """
+    if topology == "auto":
+        from repro.kernels.ops import resolve_backend
+
+        return "gather" if resolve_backend(backend) == "pallas" else "psum"
+    if topology not in TOPOLOGIES:
+        raise ValueError(
+            f"topology must be one of {TOPOLOGIES + ('auto',)}, got {topology!r}"
+        )
+    return topology
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a named mesh axis (no collective on the wire).
+
+    Resolved through ``repro.compat.axis_size``: ``jax.lax.axis_size``
+    where it exists, the statically-folded ``psum(1, axis)`` on 0.4.x, and
+    a genuine ``psum(ones)`` all-reduce only on JAX too old for either.
+    """
+    return _compat_axis_size(axis_name)
+
+
+def broadcast_from(x: jax.Array, axis_name: str, src: int = 0) -> jax.Array:
+    """Broadcast shard ``src``'s value to all shards along ``axis_name``.
+
+    One all-reduce of ``x.size`` words (vs. an all-gather of m * x.size).
+    """
+    idx = jax.lax.axis_index(axis_name)
+    masked = jnp.where(idx == src, x, jnp.zeros_like(x))
+    return jax.lax.psum(masked, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost model.
+
+
+@dataclasses.dataclass(frozen=True)
+class CommCost:
+    """Communication bill of one estimation (n_iter rounds) per topology.
+
+    ``words`` is the logical payload (module docstring conventions);
+    ``hlo_words`` the per-device HLO operand-word breakdown by collective
+    kind, matching ``hlo_analysis.collective_bytes`` keys.
+    """
+
+    topology: str
+    words: int
+    hlo_words: Dict[str, int]
+
+
+def comm_cost(
+    topology: str,
+    *,
+    m: int,
+    d: int,
+    r: int,
+    n_iter: int = 1,
+    ref_broadcast: bool = True,
+) -> CommCost:
+    """Words a topology moves for ``n_iter`` refinement rounds.
+
+    ``ref_broadcast=False`` drops the initial d·r reference broadcast
+    (psum/ring only), the ``ref=``-supplied case of the collectives
+    (e.g. the eigen-compressed optimizer aligning to last period's basis).
+    The gather topology never broadcasts: the reference is a row of the
+    gathered stack.
+    """
+    t = resolve_topology(topology)
+    n = max(n_iter, 1)
+    basis = d * r
+    bcast = basis if ref_broadcast else 0
+    if t == "psum":
+        ar = bcast + n * basis
+        return CommCost("psum", ar, {"all-reduce": ar})
+    if t == "gather":
+        # Every shard contributes its d·r operand once; rounds are free.
+        return CommCost("gather", m * basis, {"all-gather": basis})
+    hops = n * (m - 1) * basis
+    return CommCost(
+        "ring", bcast + hops,
+        {"all-reduce": bcast, "collective-permute": hops},
+    )
+
+
+def paper_coordinator_words(m: int, d: int, r: int) -> int:
+    """The paper's hub-and-spoke presentation: m bases up, one back."""
+    return m * d * r + d * r
+
+
+def fan_projector_words(d: int) -> int:
+    """Fan et al. 2019 baseline: one d x d spectral-projector all-reduce."""
+    return d * d

@@ -20,6 +20,10 @@ Mapping rules (new spelling -> 0.4.x fallback):
          caller here requests), or an explicit ``Mesh(create_device_mesh(...))``
          on even older versions without ``jax.make_mesh``.
   ``jax.tree.flatten_with_path`` -> ``jax.tree_util.tree_flatten_with_path``.
+  ``jax.lax.axis_size(name)``
+      -> ``jax.lax.psum(1, name)`` (statically folded to the mesh axis size
+         on 0.4.x — no collective is emitted), or a genuine ``psum(ones)``
+         all-reduce on JAX too old to fold constant psums.
 
 Nothing here inspects arrays; the shims are zero-overhead wrappers resolved
 against module attributes.
@@ -36,6 +40,7 @@ __all__ = [
     "AXIS_TYPE_AUTO",
     "HAS_NATIVE_SHARD_MAP",
     "auto_axis_types",
+    "axis_size",
     "make_mesh",
     "shard_map",
     "tree_flatten_with_path",
@@ -149,6 +154,32 @@ def shard_map(
     if axis_names is not None:
         kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
     return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+# -------------------------------------------------------------- axis size --
+
+def _axis_size_impl() -> Callable[[str], Any]:
+    native = getattr(jax.lax, "axis_size", None)
+    if native is not None:
+        return native
+
+    def _axis_size(axis_name: str):
+        try:
+            # psum of a Python constant is folded to the static axis size
+            # at trace time — no all-reduce reaches the wire.
+            return jax.lax.psum(1, axis_name)
+        except Exception:  # pragma: no cover - pre-constant-fold JAX
+            import jax.numpy as jnp
+
+            return jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+
+    return _axis_size
+
+
+axis_size = _axis_size_impl()
+"""Static size of a named mesh axis; a traced all-reduce only as the
+last-resort fallback on very old JAX.  Must be called under a binding for
+``axis_name`` (inside ``shard_map`` / ``vmap(axis_name=...)``)."""
 
 
 # -------------------------------------------------------------- tree paths --

@@ -1,32 +1,35 @@
 """The paper's algorithm mapped onto a JAX device mesh (shard_map).
 
-Topology adaptation (see DESIGN.md §2.1): the paper ships every machine's
-(d, r) basis to a coordinator (m·d·r words).  On a TPU mesh we instead run
+Communication topology is a first-class switch here, independent of the
+compute backend (see DESIGN.md §2.1 and ``repro.comm``).  Every collective
+entry point takes ``topology=`` ("psum" | "gather" | "ring" | "auto"):
 
-  1. ``psum``-broadcast of the reference basis (shard 0's solution),
-  2. an embarrassingly-parallel local Procrustes solve per shard,
-  3. one ``psum`` to average the aligned bases (+ a replicated thin QR),
+  * ``"psum"``   — broadcast shard 0's basis as the reference, align
+                   locally, one d·r all-reduce per round.
+  * ``"gather"`` — the paper's coordinator form: one all-gather of the m
+                   local bases per shard, then the stacked rounds run
+                   replicated and communication-free
+                   (``repro.core.eigenspace.refinement_rounds``).
+  * ``"ring"``   — the overlapped schedule (``repro.comm.ring``): bases
+                   circulate a chunked ppermute ring and every shard
+                   consumes its neighbor's basis the hop it arrives, so
+                   communication overlaps the Gram phase and the (m, d, r)
+                   stack is never materialized.
+  * ``"auto"``   — the historical backend pairing (gather under "pallas",
+                   psum otherwise), so topology is opt-in.
 
-i.e. two d·r all-reduces per round — strictly less traffic than the
-coordinator gather for m > 2, with bit-identical output to the serial
-reference (``repro.core.eigenspace``), which the tests assert.
-
-Backend dispatch: every aggregation entry point takes ``backend=``
-("xla" | "pallas" | "auto"), ``polar=`` ("svd" | "newton-schulz"), and
-``orth=`` ("qr" | "cholesky-qr2").  "xla" keeps the psum topology above.
-"pallas" switches to the paper's coordinator topology — one all-gather of
-the m local bases per shard, then the stacked Algorithm 1/2 routed through
-the ``repro.kernels.procrustes_align`` Pallas kernels (compiled on TPU,
-interpret mode elsewhere); refinement rounds then cost no further
-communication.  With ``polar="newton-schulz"`` the r x r polar factor is
-fused into the Gram kernel (SVD-free rounds), and adding
-``orth="cholesky-qr2"`` folds the final orthonormalization in too, making
-each round a *single* kernel launch with no XLA compute at all (the
-fused-round dataflow is drawn in DESIGN.md §3.2).  ``backend="pallas"``
-also routes each shard's local covariance through the
-``repro.kernels.covariance`` Gram kernel, covering the full pipeline.
-"auto" resolves to "pallas" on TPU and "xla" elsewhere.  All combinations
-compute the same estimator (the tests assert parity).
+Backend dispatch is orthogonal: ``backend=`` ("xla" | "pallas" | "auto")
+selects the compute path — under "pallas" the shard-local covariance, the
+gather topology's stacked rounds, and the psum topology's per-shard align
+(``repro.kernels.ops.align_one``) all route through the Pallas kernels
+(compiled on TPU, interpret mode elsewhere).  ``polar=`` ("svd" |
+"newton-schulz") and ``orth=`` ("qr" | "cholesky-qr2") select the round's
+r x r rotation method and final orthonormalization; the
+(pallas, gather, newton-schulz, cholesky-qr2) cell runs each round as a
+single fused kernel launch (DESIGN.md §3.2).  Every
+(backend x topology x polar x orth) cell computes the same estimator — the
+parity suites (``tests/test_topology.py``,
+``tests/test_backend_invariance.py``) assert it.
 
 All collective functions here are written to be called *inside*
 ``shard_map`` with a named mesh axis; the ``distributed_pca`` driver wraps
@@ -36,22 +39,27 @@ them for end-to-end use.  The shard_map / mesh spellings resolve through
 
 from __future__ import annotations
 
-import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.comm import (
+    DEFAULT_RING_CHUNK,
+    axis_size,
+    broadcast_from,
+    resolve_topology,
+    ring_rounds,
+)
 from repro.compat import shard_map
 from repro.core import procrustes
 from repro.core.covariance import empirical_covariance
 from repro.core.eigenspace import refinement_rounds
-from repro.core.orthonorm import orthonormalize
+from repro.core.orthonorm import orthonormalize, resolve_orth
 from repro.core.subspace import local_eigenbasis
 from repro.kernels.ops import resolve_backend
 
 __all__ = [
+    "axis_size",
     "broadcast_from",
     "procrustes_average_collective",
     "sign_average_collective",
@@ -60,18 +68,15 @@ __all__ = [
 ]
 
 
-def axis_size(axis_name: str) -> jax.Array:
-    return jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+def _align_local(
+    v: jax.Array, ref: jax.Array, *, backend: str, polar: str
+) -> jax.Array:
+    """One shard's Procrustes align for the psum topology, backend-routed."""
+    if backend == "pallas":
+        from repro.kernels import ops as kops
 
-
-def broadcast_from(x: jax.Array, axis_name: str, src: int = 0) -> jax.Array:
-    """Broadcast shard ``src``'s value to all shards along ``axis_name``.
-
-    One all-reduce of ``x.size`` words (vs. an all-gather of m * x.size).
-    """
-    idx = jax.lax.axis_index(axis_name)
-    masked = jnp.where(idx == src, x, jnp.zeros_like(x))
-    return jax.lax.psum(masked, axis_name)
+        return kops.align_one(v, ref, polar=polar, use_kernel=True)
+    return procrustes.align(v, ref, polar=polar)
 
 
 def procrustes_average_collective(
@@ -83,41 +88,56 @@ def procrustes_average_collective(
     backend: str = "xla",
     polar: str = "svd",
     orth: str = "qr",
+    topology: str = "auto",
+    ring_chunk: int = DEFAULT_RING_CHUNK,
 ) -> jax.Array:
     """Algorithm 1 (n_iter=1) / Algorithm 2 (n_iter>1) across a mesh axis.
 
     Args:
       v_local: (d, r) local leading eigenbasis on each shard.
       axis_name: mesh axis playing the role of "machines".
-      n_iter: refinement rounds; each costs one extra psum(d*r) on the
-        "xla" backend and is communication-free on "pallas" (the stack is
-        already gathered).
+      n_iter: refinement rounds.  Each round costs one d·r psum under the
+        psum topology, (m-1)·d·r ring-hop words under the ring topology,
+        and is communication-free under gather (the stack is already
+        there).
       ref: optional externally supplied reference (e.g. previous training
         step's basis, used by the eigen-compressed optimizer); defaults to
         shard 0's solution as in the paper.
-      backend: "xla" (psum topology), "pallas" (all-gather + kernel-backed
-        stacked aggregation), or "auto".
-      polar: "svd" | "newton-schulz" polar factor (see
-        ``repro.core.eigenspace``).
-      orth: "qr" | "cholesky-qr2" per-round orthonormalization (see
-        ``repro.core.orthonorm``).
+      backend: compute path, "xla" | "pallas" | "auto" (kernels on TPU).
+      polar: "svd" | "newton-schulz" polar factor (``repro.core.procrustes``).
+      orth: "qr" | "cholesky-qr2" per-round orthonormalization
+        (``repro.core.orthonorm``).
+      topology: communication schedule, "psum" | "gather" | "ring" |
+        "auto" (see module docstring / ``repro.comm``).  Independent of
+        ``backend``.
+      ring_chunk: rows per circulating chunk of the ring schedule (the
+        comm/compute overlap granularity; need not divide d).
 
     Returns the replicated (d, r) Procrustes-fixed average.
     """
-    if resolve_backend(backend) == "pallas":
+    procrustes.resolve_polar(polar)
+    resolve_orth(orth)
+    backend = resolve_backend(backend)
+    topo = resolve_topology(topology, backend)
+    if topo == "gather":
         # Coordinator topology, replicated on every shard: gather the m
-        # local bases once, then run the kernel-dispatched stacked rounds
+        # local bases once, then run the backend-dispatched stacked rounds
         # (the loop itself lives in ``eigenspace.refinement_rounds``).
         vs = jax.lax.all_gather(v_local, axis_name)  # (m, d, r)
         return refinement_rounds(
-            vs, ref, n_iter=n_iter, backend="pallas", polar=polar, orth=orth
+            vs, ref, n_iter=n_iter, backend=backend, polar=polar, orth=orth
+        )
+    if topo == "ring":
+        return ring_rounds(
+            v_local, ref, axis_name=axis_name, n_iter=n_iter,
+            polar=polar, orth=orth, chunk=ring_chunk,
         )
     m = axis_size(axis_name)
     if ref is None:
         ref = broadcast_from(v_local, axis_name, src=0)
     for _ in range(max(n_iter, 1)):
-        aligned = procrustes.align(v_local, ref, polar=polar)
-        vbar = jax.lax.psum(aligned, axis_name) / m
+        aligned = _align_local(v_local, ref, backend=backend, polar=polar)
+        vbar = jax.lax.psum(aligned.astype(v_local.dtype), axis_name) / m
         ref = orthonormalize(vbar, orth=orth)
     return ref
 
@@ -156,15 +176,17 @@ def distributed_pca(
     backend: str = "xla",
     polar: str = "svd",
     orth: str = "qr",
+    topology: str = "auto",
 ) -> jax.Array:
     """End-to-end one-shot distributed PCA on a mesh.
 
     ``samples`` (N, d) are sharded along the leading axis over ``data_axis``;
     each shard forms its local covariance, local top-r basis, and the mesh
-    runs the Procrustes-fixed average.  ``backend`` selects the whole
-    pipeline's path — ``"pallas"`` kernels both the shard-local covariance
-    stage and the aggregation (see module docstring) — ``polar`` the
-    rotation method, and ``orth`` the per-round orthonormalization.
+    runs the Procrustes-fixed average.  ``backend`` selects the compute
+    path — ``"pallas"`` kernels both the shard-local covariance stage and
+    the aggregation (see module docstring) — ``polar`` the rotation
+    method, ``orth`` the per-round orthonormalization, and ``topology``
+    the communication schedule the aggregation runs over.
     Returns the (d, r) estimate.
     """
 
@@ -174,7 +196,7 @@ def distributed_pca(
         )
         out = procrustes_average_collective(
             v, axis_name=data_axis, n_iter=n_iter,
-            backend=backend, polar=polar, orth=orth,
+            backend=backend, polar=polar, orth=orth, topology=topology,
         )
         return out[None]  # keep a sharded leading axis; identical on every shard
 
@@ -201,6 +223,7 @@ def distributed_pca_from_covs(
     backend: str = "xla",
     polar: str = "svd",
     orth: str = "qr",
+    topology: str = "auto",
 ) -> jax.Array:
     """Same as ``distributed_pca`` but from pre-formed local matrices (m, d, d).
 
@@ -215,7 +238,7 @@ def distributed_pca_from_covs(
         v, _ = local_eigenbasis(cov, r, method=solver, iters=iters)
         out = procrustes_average_collective(
             v, axis_name=data_axis, n_iter=n_iter,
-            backend=backend, polar=polar, orth=orth,
+            backend=backend, polar=polar, orth=orth, topology=topology,
         )
         return out[None]
 

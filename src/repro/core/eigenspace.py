@@ -8,7 +8,11 @@ estimator, and the spectral-projector-averaging baseline of Fan et al. 2019
 benchmarks run.
 
 All functions take local solutions as a stacked array ``vs`` of shape
-(m, d, r) — machine-major — and are jit-friendly.
+(m, d, r) — machine-major — and are jit-friendly.  How that stack comes to
+exist on a mesh is the *communication topology*'s business
+(``repro.comm``): the gather topology materializes it and delegates here;
+the psum and ring topologies never form it and run the same round body
+shard-locally in ``repro.core.distributed`` / ``repro.comm.ring``.
 
 The aggregation hot path takes three switches (see DESIGN.md §3):
 
@@ -133,7 +137,7 @@ def refinement_rounds(
     (align to ``ref``, average, orthonormalize) ``n_iter`` times over an
     already-stacked (m, d, r) ``vs``, re-using each output as the next
     reference, dispatched on ``backend``/``polar``/``orth``.  Both
-    ``iterative_refinement`` and the pallas-topology branch of
+    ``iterative_refinement`` and the gather-topology branch of
     ``repro.core.distributed.procrustes_average_collective`` call this.
     """
     from repro.kernels.ops import resolve_backend

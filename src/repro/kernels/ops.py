@@ -33,6 +33,7 @@ __all__ = [
     "batched_gram",
     "batched_gram_polar",
     "align_average",
+    "align_one",
     "fused_round",
     "attention",
 ]
@@ -96,6 +97,33 @@ def align_average(
     return _dispatch(
         _pa.align_average, _ref.align_average, use_kernel, vs, zs, **kw
     )
+
+
+def align_one(
+    v: jax.Array,
+    ref: jax.Array,
+    *,
+    polar: str = "svd",
+    use_kernel: bool | None = None,
+    **kw,
+) -> jax.Array:
+    """Procrustes-align a single (d, r) basis to ``ref`` through the
+    kernel stages, as an m=1 stack: Gram (with the Newton–Schulz polar
+    fused in-kernel when ``polar="newton-schulz"``) then apply.
+
+    This is the per-shard compute of the *psum* communication topology
+    under ``backend="pallas"`` (``repro.core.distributed``): topology and
+    backend are independent axes, so the kernels must also serve the
+    schedule where no (m, d, r) stack ever exists.  Returns (d, r) f32.
+    """
+    vs = v[None]
+    if polar == "newton-schulz":
+        z = batched_gram_polar(vs, ref, use_kernel=use_kernel, **kw)
+    else:
+        g = batched_gram(vs, ref, use_kernel=use_kernel, **kw)
+        u, _, wt = jnp.linalg.svd(g, full_matrices=False)  # stays in XLA
+        z = u @ wt
+    return align_average(vs, z, use_kernel=use_kernel, **kw)  # /m is /1
 
 
 def fused_round(

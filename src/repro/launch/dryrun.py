@@ -314,23 +314,33 @@ def _gb(x):
 def dryrun_paper_pca(
     *, multi_pod: bool = False, device_count=None, verbose=True,
     backend: str = "xla", polar: str = "svd", orth: str = "qr",
+    topology: str = "auto",
 ):
     """Dry-run the paper's own workload (distributed PCA, Algorithm 2).
 
-    ``backend`` selects the aggregation path ("xla" | "pallas" | "auto");
-    the collective-bytes accounting shows the psum-vs-all-gather topology
-    trade directly.  ``polar`` selects the r x r rotation method
+    ``backend`` selects the compute path ("xla" | "pallas" | "auto") and
+    ``topology`` the communication schedule ("psum" | "gather" | "ring" |
+    "auto", see ``repro.comm``); the collective-bytes accounting shows the
+    topology trade directly, and the record carries the analytic
+    words-per-round prediction from ``repro.comm.comm_cost`` next to the
+    measured HLO breakdown.  ``polar`` selects the r x r rotation method
     ("svd" | "newton-schulz"); with "newton-schulz" the lowered graph is
     SVD-free, which the HLO accounting reflects.  ``orth`` selects the
     per-round orthonormalization ("qr" | "cholesky-qr2"); the SVD- and
     Householder-free cell is (pallas, newton-schulz, cholesky-qr2).
     """
+    from repro.comm import comm_cost, resolve_topology
     from repro.configs.paper_pca import CONFIG as pcfg
     from repro.core.distributed import distributed_pca
 
     mesh = _mesh_for(multi_pod, device_count)
     chips = mesh.size
     n_data = mesh.shape["data"] * (mesh.shape.get("pod", 1))
+    topo = resolve_topology(topology, backend)
+    # The aggregation collective runs over the "data" axis only.
+    cost = comm_cost(
+        topo, m=mesh.shape["data"], d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter
+    )
     samples_like = jax.ShapeDtypeStruct(
         (n_data * pcfg.n_per_shard, pcfg.d), jnp.float32
     )
@@ -342,6 +352,13 @@ def dryrun_paper_pca(
         "backend": backend,
         "polar": polar,
         "orth": orth,
+        "topology": topo,
+        "predicted_collective_words": cost.words,
+        # f32 bases: one word = 4 bytes; directly comparable to the
+        # aggregation's share of ``collective_breakdown`` below.
+        "predicted_collective_bytes": {
+            k: 4 * v for k, v in cost.hlo_words.items() if v
+        },
         "mesh": {"shape": list(mesh.shape.values()), "axes": list(mesh.axis_names)},
     }
     t0 = time.time()
@@ -350,7 +367,7 @@ def dryrun_paper_pca(
         return distributed_pca(
             samples, mesh, pcfg.r,
             n_iter=pcfg.n_iter, solver=pcfg.solver, iters=pcfg.solver_iters,
-            backend=backend, polar=polar, orth=orth,
+            backend=backend, polar=polar, orth=orth, topology=topology,
         )
 
     lowered = jax.jit(job).lower(samples_like)
@@ -392,6 +409,11 @@ def main():
     ap.add_argument("--orth", default="qr",
                     choices=["qr", "cholesky-qr2"],
                     help="per-round orthonormalization for --paper-pca")
+    ap.add_argument("--topology", default="auto",
+                    choices=["psum", "gather", "ring", "auto"],
+                    help="communication schedule for --paper-pca "
+                         "(repro.comm); the record carries the cost-model "
+                         "prediction next to the measured HLO bytes")
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--device-count", type=int, default=512,
                     help="reduced placeholder device count for CI smoke")
@@ -457,7 +479,7 @@ def main():
             if arch == "paper-pca":
                 rec = dryrun_paper_pca(multi_pod=mp, device_count=args.device_count,
                                        backend=args.backend, polar=args.polar,
-                                       orth=args.orth)
+                                       orth=args.orth, topology=args.topology)
             else:
                 rec = dryrun_cell(
                     arch, shape, multi_pod=mp, eigen=args.eigen,

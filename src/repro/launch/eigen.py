@@ -45,6 +45,7 @@ def run(
     backend: str = "xla",
     polar: str = "svd",
     orth: str = "qr",
+    topology: str = "auto",
 ):
     mesh = mesh or make_host_mesh(model=1)
     m = mesh.shape["data"]
@@ -58,7 +59,7 @@ def run(
     t0 = time.perf_counter()
     v_dist = distributed_pca(
         samples, mesh, r, n_iter=n_iter, solver=solver, iters=iters,
-        backend=backend, polar=polar, orth=orth,
+        backend=backend, polar=polar, orth=orth, topology=topology,
     )
     v_dist.block_until_ready()
     t_dist = time.perf_counter() - t0
@@ -75,6 +76,7 @@ def run(
         "backend": backend,
         "polar": polar,
         "orth": orth,
+        "topology": topology,
         "dist_aligned": float(dist_2(v_dist, v1)),
         "dist_central": float(dist_2(v_cent, v1)),
         "dist_naive": float(dist_2(naive_average(vs), v1)),
@@ -103,12 +105,18 @@ def main():
                          "QR or CholeskyQR2 (with --backend pallas "
                          "--polar newton-schulz the whole round fuses "
                          "into a single kernel launch)")
+    ap.add_argument("--topology", default="auto",
+                    choices=["psum", "gather", "ring", "auto"],
+                    help="communication schedule of the aggregation "
+                         "(repro.comm): psum all-reduces, coordinator "
+                         "all-gather, or the overlapped ring; auto keeps "
+                         "the historical backend pairing")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
     _, stats = run(
         args.d, args.r, args.n_per_shard, n_iter=args.n_iter,
         solver=args.solver, backend=args.backend, polar=args.polar,
-        orth=args.orth,
+        orth=args.orth, topology=args.topology,
     )
     for k, v in stats.items():
         print(f"{k}: {v}")

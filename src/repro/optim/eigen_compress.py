@@ -34,6 +34,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm import axis_size
 from repro.core.distributed import procrustes_average_collective
 
 
@@ -44,6 +45,10 @@ class EigenCompressConfig:
     min_dim: int = 1024      # compress only if leading dim >= min_dim
     power_iters: int = 4     # subspace iterations on G G^T (implicit)
     n_iter: int = 1          # Algorithm 1 (1) / Algorithm 2 (>1)
+    # Communication schedule of the basis-refresh collective (repro.comm).
+    # "psum" is right for the in-train-step setting: the refresh aligns to
+    # an existing reference most steps, so a round is one d*r all-reduce.
+    topology: str = "psum"
     error_feedback: bool = True
     bf16_psum: bool = False  # bf16 all-reduce for UNcompressed leaves
 
@@ -106,16 +111,16 @@ def refresh_basis(
 
     def one(g, prev, k):
         v_loc = _local_basis(g, prev.shape[-1], cfg.power_iters, k)
-        ref = jnp.where(initialized, 1.0, 0.0)  # traced selector
         # Align against previous basis when initialized, else shard-0 default.
         v_prev = procrustes_average_collective(
-            v_loc, axis_name=axis_name, n_iter=cfg.n_iter, ref=prev
+            v_loc, axis_name=axis_name, n_iter=cfg.n_iter, ref=prev,
+            topology=cfg.topology,
         )
         v_new = procrustes_average_collective(
-            v_loc, axis_name=axis_name, n_iter=cfg.n_iter
+            v_loc, axis_name=axis_name, n_iter=cfg.n_iter,
+            topology=cfg.topology,
         )
         return jnp.where(initialized, v_prev, v_new)
-        del ref
 
     if g_local.ndim == 2:
         return one(g_local, prev_basis, key)
@@ -135,7 +140,7 @@ def compress_and_reduce(
     (d x n) and the low-rank coordinates (r x n) the Adam moments live in.
     Communication: psum of r*n words instead of d*n.
     """
-    m = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    m = axis_size(axis_name)  # static: no all-reduce on the wire
     g_eff = g_local.astype(jnp.float32) + state["err"]
     p = state["basis"]
     if g_local.ndim == 2:

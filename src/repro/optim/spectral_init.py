@@ -31,14 +31,16 @@ def distributed_spectral_init(
     backend: str = "xla",
     polar: str = "svd",
     orth: str = "qr",
+    topology: str = "auto",
 ) -> jax.Array:
     """a: (N, d) design vectors, y: (N,) measurements, sharded over the mesh.
 
-    ``backend`` selects the aggregation path ("xla" | "pallas" | "auto"),
-    ``polar`` the rotation method ("svd" | "newton-schulz"), and ``orth``
-    the per-round orthonormalization ("qr" | "cholesky-qr2"), see
-    ``repro.core.distributed``.  Returns the (d, r) Procrustes-averaged
-    spectral initialiser X_0.
+    ``backend`` selects the compute path ("xla" | "pallas" | "auto"),
+    ``polar`` the rotation method ("svd" | "newton-schulz"), ``orth``
+    the per-round orthonormalization ("qr" | "cholesky-qr2"), and
+    ``topology`` the communication schedule ("psum" | "gather" | "ring" |
+    "auto"), see ``repro.core.distributed`` / ``repro.comm``.  Returns the
+    (d, r) Procrustes-averaged spectral initialiser X_0.
     """
 
     def shard_fn(a_s, y_s):
@@ -46,7 +48,7 @@ def distributed_spectral_init(
         v, _ = local_eigenbasis(d_n, r, method=solver, iters=iters)
         out = procrustes_average_collective(
             v, axis_name=data_axis, n_iter=n_iter,
-            backend=backend, polar=polar, orth=orth,
+            backend=backend, polar=polar, orth=orth, topology=topology,
         )
         return out[None]
 
