@@ -1,6 +1,10 @@
 """Roofline report: aggregate artifacts/dryrun/*.json into the per-cell
 table for EXPERIMENTS.md (§Dry-run + §Roofline).
 
+The loading/sorting and table rendering live in the library
+(``repro.plan.roofline`` — the planner and this report price against the
+same device models); this module is the CLI.
+
 Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
                                                     [--markdown]
 """
@@ -8,75 +12,12 @@ Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
 from __future__ import annotations
 
 import argparse
-import glob
-import json
-import os
-from typing import Dict, List
 
-SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
-
-
-def load(dirname: str) -> List[Dict]:
-    recs = []
-    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
-        with open(path) as f:
-            recs.append(json.load(f))
-    return recs
-
-
-def fmt_row(r: Dict) -> str:
-    if "skipped" in r:
-        return (
-            f"{r['arch']},{r['shape']},{'multi' if r['multi_pod'] else 'single'},"
-            "SKIP,,,,,,,"
-        )
-    if "error" in r:
-        return (
-            f"{r['arch']},{r['shape']},{'multi' if r['multi_pod'] else 'single'},"
-            "ERROR,,,,,,,"
-        )
-    dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
-    frac = r["compute_s"] / max(dom, 1e-30)
-    return (
-        f"{r['arch']},{r['shape']},{'multi' if r['multi_pod'] else 'single'},"
-        f"{'eigen,' if r.get('eigen') else 'base,'}"
-        f"{r['compute_s']*1e3:.2f},{r['memory_s']*1e3:.2f},"
-        f"{r['collective_s']*1e3:.2f},{r['bottleneck']},"
-        f"{r.get('useful_flops_ratio', 0):.3f},{frac:.3f},"
-        f"{r.get('compile_s', 0):.0f}"
-    )
-
-
-def markdown_table(recs: List[Dict]) -> str:
-    lines = [
-        "| arch | shape | mesh | compute ms | memory ms | collective ms | "
-        "bottleneck | useful FLOP ratio | roofline frac |",
-        "|---|---|---|---|---|---|---|---|---|",
-    ]
-    for r in recs:
-        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
-        if "skipped" in r:
-            lines.append(
-                f"| {r['arch']} | {r['shape']} | {mesh} | — | — | — | "
-                f"skipped | — | — |"
-            )
-            continue
-        if "error" in r:
-            lines.append(
-                f"| {r['arch']} | {r['shape']} | {mesh} | ERR | ERR | ERR | "
-                f"error | — | — |"
-            )
-            continue
-        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
-        frac = r["compute_s"] / max(dom, 1e-30)
-        tag = " (eigen)" if r.get("eigen") else ""
-        lines.append(
-            f"| {r['arch']}{tag} | {r['shape']} | {mesh} | "
-            f"{r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} | "
-            f"{r['collective_s']*1e3:.2f} | {r['bottleneck']} | "
-            f"{r.get('useful_flops_ratio', 0):.3f} | {frac:.3f} |"
-        )
-    return "\n".join(lines)
+from repro.plan.roofline import (
+    dryrun_csv_row,
+    dryrun_markdown_table,
+    load_dryrun_records,
+)
 
 
 def main():
@@ -84,23 +25,16 @@ def main():
     ap.add_argument("--dir", default="artifacts/dryrun")
     ap.add_argument("--markdown", action="store_true")
     args = ap.parse_args()
-    recs = load(args.dir)
-    recs.sort(
-        key=lambda r: (
-            r.get("multi_pod", False),
-            r["arch"],
-            SHAPE_ORDER.index(r["shape"]) if r.get("shape") in SHAPE_ORDER else 9,
-        )
-    )
+    recs = load_dryrun_records(args.dir)
     if args.markdown:
-        print(markdown_table(recs))
+        print(dryrun_markdown_table(recs))
         return
     print(
         "arch,shape,mesh,variant,compute_ms,memory_ms,collective_ms,"
         "bottleneck,useful_ratio,roofline_frac,compile_s"
     )
     for r in recs:
-        print(fmt_row(r))
+        print(dryrun_csv_row(r))
 
 
 if __name__ == "__main__":

@@ -5,6 +5,10 @@ Reproduces the paper's headline result on a synthetic problem: Algorithm 1
 collapses.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+Set REPRO_QUICKSTART_SCALE=tiny to run a seconds-scale version of the
+same script (CI's doc-test lane does this so the front door cannot rot —
+see tests/test_docs.py).
 """
 
 import os
@@ -28,7 +32,10 @@ from repro.launch.mesh import make_host_mesh
 
 
 def main():
-    d, r, n_per_machine = 300, 8, 400  # the paper's Section 3.1 scale
+    if os.environ.get("REPRO_QUICKSTART_SCALE") == "tiny":
+        d, r, n_per_machine = 64, 4, 128  # CI doc-test scale
+    else:
+        d, r, n_per_machine = 300, 8, 400  # the paper's Section 3.1 scale
     mesh = make_host_mesh(model=1)  # all devices on the 'data' axis
     m = mesh.shape["data"]
     print(f"mesh: {m} machines x {n_per_machine} samples, d={d}, r={r}")
@@ -41,8 +48,10 @@ def main():
     samples = syn.sample_gaussian(k2, factor, m * n_per_machine)
 
     # --- the paper's algorithm, one-shot across the mesh -------------------
-    v_aligned = distributed_pca(samples, mesh, r, n_iter=1)          # Alg 1
-    v_refined = distributed_pca(samples, mesh, r, n_iter=5)          # Alg 2
+    # plan="auto" lets the cost-model planner (repro.plan) pick the
+    # backend/topology/polar/orth execution cell for this (m, d, r).
+    v_aligned = distributed_pca(samples, mesh, r, n_iter=1, plan="auto")  # Alg 1
+    v_refined = distributed_pca(samples, mesh, r, n_iter=5, plan="auto")  # Alg 2
 
     # --- baselines ----------------------------------------------------------
     covs = jax.vmap(lambda x: empirical_covariance(x))(

@@ -18,6 +18,7 @@ import time (core/kernels imports are function-level), so it sits below
 
 from repro.comm.topology import (  # noqa: F401
     TOPOLOGIES,
+    TOPOLOGY_CHOICES,
     CommCost,
     axis_size,
     broadcast_from,

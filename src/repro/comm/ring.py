@@ -58,7 +58,10 @@ __all__ = ["DEFAULT_RING_CHUNK", "ring_rounds"]
 # Rows per circulating chunk — the overlap granularity.  Matches the
 # Pallas kernels' default d-block (bk=2048): ~2048*r*4 bytes per transfer
 # keeps per-hop latency amortized while still splitting large-d bases into
-# several in-flight transfers.
+# several in-flight transfers.  This is the legacy fixed default; the
+# planner (``repro.plan.choose_ring_chunk``) sizes the chunk from the
+# device's latency-bandwidth product instead (the d·r-vs-per-hop-latency
+# rule, DESIGN.md §8) and threads it through ``plan="auto"``.
 DEFAULT_RING_CHUNK = 2048
 
 
@@ -70,7 +73,16 @@ def _chunk_spans(d: int, chunk: int) -> List[Tuple[int, int]]:
 
 def _aligned_contribution(chunks, ref_chunks, *, polar: str):
     """align(V, ref) for a chunked (d, r) basis: chunk-accumulated Gram,
-    one r x r polar, chunked apply.  All f32."""
+    one r x r polar, chunked apply.  All f32.
+
+    This is Algorithm 1's alignment step (eq. (5)/(6)) evaluated
+    incrementally: the Gram ``Vᵀ ref`` accumulates as the chunks land,
+    so the rotation is available one polar solve after the last chunk
+    arrives.  Each hop's aligned output feeds Algorithm 1's averaging
+    step via the running accumulator in ``_ring_round`` — the ring never
+    needs the (m, d, r) stack the stacked form averages over.  A hop
+    moves d·r words, matching the paper's §2.1 / Remark 2 accounting
+    (``repro.comm.comm_cost``'s ring row)."""
     from repro.core.procrustes import polar_factor
 
     g = sum(c.T @ rc for c, rc in zip(chunks, ref_chunks))

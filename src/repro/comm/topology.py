@@ -54,6 +54,7 @@ from repro.compat import axis_size as _compat_axis_size
 
 __all__ = [
     "TOPOLOGIES",
+    "TOPOLOGY_CHOICES",
     "resolve_topology",
     "axis_size",
     "broadcast_from",
@@ -65,6 +66,12 @@ __all__ = [
 
 TOPOLOGIES = ("psum", "gather", "ring")
 
+# The single home of the *accepted-values* listing (registry entries plus
+# the "auto" switch).  ``resolve_topology``'s error message, both CLIs'
+# ``choices=``, and the planner registry (``repro.plan.TOPOLOGY_CHOICES``
+# re-exports this object) all read this tuple, so they cannot drift.
+TOPOLOGY_CHOICES = TOPOLOGIES + ("auto",)
+
 
 def resolve_topology(topology: str, backend: str = "xla") -> str:
     """Resolve a ``topology=`` switch to a concrete registry entry.
@@ -72,7 +79,10 @@ def resolve_topology(topology: str, backend: str = "xla") -> str:
     ``"auto"`` keeps the historical backend pairing — "gather" when the
     resolved backend is "pallas" (the kernels run on the gathered stack),
     "psum" otherwise — so the topology axis is opt-in.  Any explicit
-    topology is honoured under any backend.
+    topology is honoured under any backend.  The cost-model-driven
+    choice lives above this in ``repro.plan`` (``plan="auto"`` on the
+    aggregation entry points); this function stays the legacy-pairing
+    resolver that the planner's ``plan=None`` path delegates to.
     """
     if topology == "auto":
         from repro.kernels.ops import resolve_backend
@@ -80,7 +90,7 @@ def resolve_topology(topology: str, backend: str = "xla") -> str:
         return "gather" if resolve_backend(backend) == "pallas" else "psum"
     if topology not in TOPOLOGIES:
         raise ValueError(
-            f"topology must be one of {TOPOLOGIES + ('auto',)}, got {topology!r}"
+            f"topology must be one of {TOPOLOGY_CHOICES}, got {topology!r}"
         )
     return topology
 

@@ -44,7 +44,6 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.comm import (
-    DEFAULT_RING_CHUNK,
     axis_size,
     broadcast_from,
     resolve_topology,
@@ -56,7 +55,6 @@ from repro.core.covariance import empirical_covariance
 from repro.core.eigenspace import refinement_rounds
 from repro.core.orthonorm import orthonormalize, resolve_orth
 from repro.core.subspace import local_eigenbasis
-from repro.kernels.ops import resolve_backend
 
 __all__ = [
     "axis_size",
@@ -85,11 +83,12 @@ def procrustes_average_collective(
     axis_name: str,
     n_iter: int = 1,
     ref: jax.Array | None = None,
-    backend: str = "xla",
-    polar: str = "svd",
-    orth: str = "qr",
-    topology: str = "auto",
-    ring_chunk: int = DEFAULT_RING_CHUNK,
+    backend: str | None = None,
+    polar: str | None = None,
+    orth: str | None = None,
+    topology: str | None = None,
+    ring_chunk: int | None = None,
+    plan=None,
 ) -> jax.Array:
     """Algorithm 1 (n_iter=1) / Algorithm 2 (n_iter>1) across a mesh axis.
 
@@ -104,21 +103,38 @@ def procrustes_average_collective(
         step's basis, used by the eigen-compressed optimizer); defaults to
         shard 0's solution as in the paper.
       backend: compute path, "xla" | "pallas" | "auto" (kernels on TPU).
+        Default "xla".
       polar: "svd" | "newton-schulz" polar factor (``repro.core.procrustes``).
+        Default "svd".
       orth: "qr" | "cholesky-qr2" per-round orthonormalization
-        (``repro.core.orthonorm``).
+        (``repro.core.orthonorm``).  Default "qr".
       topology: communication schedule, "psum" | "gather" | "ring" |
         "auto" (see module docstring / ``repro.comm``).  Independent of
-        ``backend``.
+        ``backend``.  Default "auto" (the historical pairing).
       ring_chunk: rows per circulating chunk of the ring schedule (the
-        comm/compute overlap granularity; need not divide d).
+        comm/compute overlap granularity; need not divide d).  Default:
+        the planner's d·r-vs-latency rule under ``plan="auto"``,
+        ``repro.comm.DEFAULT_RING_CHUNK`` otherwise.
+      plan: ``None`` — legacy per-knob resolution, byte-identical to
+        before; ``"auto"`` — the ``repro.plan`` cost model scores the
+        (backend x topology x polar x orth) cube for this (m, d, r) and
+        decides every knob left free (concrete knob arguments are pins);
+        a ``repro.plan.Plan`` — used verbatim.
 
     Returns the replicated (d, r) Procrustes-fixed average.
     """
+    from repro.plan.planner import resolve_plan
+
+    d, r = v_local.shape
+    pl = resolve_plan(
+        plan, m=axis_size(axis_name), d=d, r=r, n_iter=n_iter,
+        backend=backend, topology=topology, polar=polar, orth=orth,
+        ring_chunk=ring_chunk, ref_broadcast=(ref is None),
+    )
+    backend, topo, polar, orth = pl.backend, pl.topology, pl.polar, pl.orth
     procrustes.resolve_polar(polar)
     resolve_orth(orth)
-    backend = resolve_backend(backend)
-    topo = resolve_topology(topology, backend)
+    resolve_topology(topo, backend)
     if topo == "gather":
         # Coordinator topology, replicated on every shard: gather the m
         # local bases once, then run the backend-dispatched stacked rounds
@@ -130,7 +146,7 @@ def procrustes_average_collective(
     if topo == "ring":
         return ring_rounds(
             v_local, ref, axis_name=axis_name, n_iter=n_iter,
-            polar=polar, orth=orth, chunk=ring_chunk,
+            polar=polar, orth=orth, chunk=pl.ring_chunk,
         )
     m = axis_size(axis_name)
     if ref is None:
@@ -173,10 +189,11 @@ def distributed_pca(
     n_iter: int = 1,
     solver: str = "eigh",
     iters: int = 30,
-    backend: str = "xla",
-    polar: str = "svd",
-    orth: str = "qr",
-    topology: str = "auto",
+    backend: str | None = None,
+    polar: str | None = None,
+    orth: str | None = None,
+    topology: str | None = None,
+    plan=None,
 ) -> jax.Array:
     """End-to-end one-shot distributed PCA on a mesh.
 
@@ -187,16 +204,26 @@ def distributed_pca(
     the aggregation (see module docstring) — ``polar`` the rotation
     method, ``orth`` the per-round orthonormalization, and ``topology``
     the communication schedule the aggregation runs over.
+    ``plan=None|"auto"|Plan`` resolves all four through the execution
+    planner (``repro.plan``): the plan is resolved once here at the
+    driver level — so a planned ``backend`` also routes the shard-local
+    covariance stage — and passed to the collective verbatim.
     Returns the (d, r) estimate.
     """
+    from repro.plan.planner import resolve_plan
+
+    pl = resolve_plan(
+        plan, m=mesh.shape[data_axis], d=samples.shape[-1], r=r,
+        n_iter=n_iter, backend=backend, topology=topology,
+        polar=polar, orth=orth,
+    )
 
     def shard_fn(x_shard: jax.Array) -> jax.Array:
         v = _local_pca_basis(
-            x_shard, r, solver=solver, iters=iters, backend=backend
+            x_shard, r, solver=solver, iters=iters, backend=pl.backend
         )
         out = procrustes_average_collective(
-            v, axis_name=data_axis, n_iter=n_iter,
-            backend=backend, polar=polar, orth=orth, topology=topology,
+            v, axis_name=data_axis, n_iter=n_iter, plan=pl,
         )
         return out[None]  # keep a sharded leading axis; identical on every shard
 
@@ -220,25 +247,33 @@ def distributed_pca_from_covs(
     n_iter: int = 1,
     solver: str = "eigh",
     iters: int = 30,
-    backend: str = "xla",
-    polar: str = "svd",
-    orth: str = "qr",
-    topology: str = "auto",
+    backend: str | None = None,
+    polar: str | None = None,
+    orth: str | None = None,
+    topology: str | None = None,
+    plan=None,
 ) -> jax.Array:
     """Same as ``distributed_pca`` but from pre-formed local matrices (m, d, d).
 
     This is the paper's abstract setting (each machine holds a noisy X̂ⁱ),
     useful when the local matrices are not covariances (e.g. quadratic
-    sensing's D_N, HOPE proximity matrices).
+    sensing's D_N, HOPE proximity matrices).  ``plan`` as in
+    ``distributed_pca`` (resolved once at the driver level).
     """
+    from repro.plan.planner import resolve_plan
+
+    pl = resolve_plan(
+        plan, m=mesh.shape[data_axis], d=covs.shape[-1], r=r,
+        n_iter=n_iter, backend=backend, topology=topology,
+        polar=polar, orth=orth,
+    )
 
     def shard_fn(cov_shard: jax.Array) -> jax.Array:
         # cov_shard: (m_local, d, d); m_local == 1 when m == mesh size.
         cov = jnp.mean(cov_shard, axis=0)
         v, _ = local_eigenbasis(cov, r, method=solver, iters=iters)
         out = procrustes_average_collective(
-            v, axis_name=data_axis, n_iter=n_iter,
-            backend=backend, polar=polar, orth=orth, topology=topology,
+            v, axis_name=data_axis, n_iter=n_iter, plan=pl,
         )
         return out[None]
 

@@ -36,7 +36,30 @@ The aggregation hot path takes three switches (see DESIGN.md §3):
 All round structure funnels through one round-body dispatch
 (``refinement_rounds``); every cell of the (backend x polar x orth) cube
 computes the same estimator (the differential tests assert parity to 1e-5
-f64 subspace distance); "pallas" accumulates in f32.
+f64 subspace distance); "pallas" accumulates in f32.  Instead of picking
+the switches by hand, pass ``plan="auto"`` and the cost-model planner
+(``repro.plan``) scores the cube and decides; ``plan=None`` keeps the
+per-knob legacy behavior exactly.
+
+Paper-anchor map (Algorithm 1 = one-shot Procrustes fixing; Algorithm 2
+= iterative refinement; README.md's paper→code table points here):
+
+  * step 1, local solve:    ``repro.core.subspace.local_eigenbasis``
+                            (per-machine top-r eigenbasis), batched by
+                            ``local_bases``.
+  * step 2, alignment:      the Procrustes problem eq. (5) with closed
+                            form eq. (6) — ``repro.core.procrustes
+                            .procrustes_rotation`` / ``align_batch``.
+  * step 3, averaging:      V̄ = (1/m) Σᵢ Vᵢ Zᵢ — the ``jnp.mean`` of the
+                            aligned stack inside ``refinement_rounds``
+                            (contrast eq. (3), ``naive_average``'s
+                            unaligned mean that Fig. 1 shows collapsing).
+  * step 4, re-orthonormalization: thin QR of V̄ —
+                            ``repro.core.orthonorm.orthonormalize``.
+  * Algorithm 2:            repeat steps 2–4 with the previous output as
+                            the reference — the ``n_iter`` loop of
+                            ``refinement_rounds`` / ``iterative_refinement``.
+  * communication accounting (§2.1 / Remark 2): ``repro.comm.comm_cost``.
 """
 
 from __future__ import annotations
@@ -129,26 +152,38 @@ def refinement_rounds(
     ref: jax.Array | None = None,
     *,
     n_iter: int = 1,
-    backend: str = "xla",
-    polar: str = "svd",
-    orth: str = "qr",
+    backend: str | None = None,
+    polar: str | None = None,
+    orth: str | None = None,
+    plan=None,
 ) -> jax.Array:
     """The single home of the round structure: run the Algorithm-1 body
-    (align to ``ref``, average, orthonormalize) ``n_iter`` times over an
-    already-stacked (m, d, r) ``vs``, re-using each output as the next
-    reference, dispatched on ``backend``/``polar``/``orth``.  Both
-    ``iterative_refinement`` and the gather-topology branch of
+    (steps 2–4: align to ``ref``, average, orthonormalize) ``n_iter``
+    times over an already-stacked (m, d, r) ``vs``, re-using each output
+    as the next reference (Algorithm 2), dispatched on
+    ``backend``/``polar``/``orth``.  Both ``iterative_refinement`` and
+    the gather-topology branch of
     ``repro.core.distributed.procrustes_average_collective`` call this.
-    """
-    from repro.kernels.ops import resolve_backend
 
+    ``plan=None|"auto"|repro.plan.Plan`` resolves the switches through
+    the execution planner (``repro.plan.resolve_plan``): ``None`` keeps
+    the documented legacy defaults ("xla", "svd", "qr"); ``"auto"``
+    scores the (backend x polar x orth) cube for this (m, d, r) with
+    concrete knob arguments as pins.
+    """
+    from repro.plan.planner import resolve_plan
+
+    m, d, r = vs.shape
+    pl = resolve_plan(
+        plan, m=m, d=d, r=r, n_iter=n_iter,
+        backend=backend, polar=polar, orth=orth, context="stacked",
+    )
+    backend, polar, orth = pl.backend, pl.polar, pl.orth
     procrustes.resolve_polar(polar)
     resolve_orth(orth)
     if ref is None:
         ref = vs[0]
-    rounds = (
-        _rounds_pallas if resolve_backend(backend) == "pallas" else _rounds_xla
-    )
+    rounds = _rounds_pallas if backend == "pallas" else _rounds_xla
     return rounds(vs, ref, n_iter=n_iter, polar=polar, orth=orth)
 
 
@@ -156,47 +191,54 @@ def procrustes_fix_average(
     vs: jax.Array,
     ref: jax.Array | None = None,
     *,
-    backend: str = "xla",
-    polar: str = "svd",
-    orth: str = "qr",
+    backend: str | None = None,
+    polar: str | None = None,
+    orth: str | None = None,
+    plan=None,
 ) -> jax.Array:
-    """Algorithm 1: Procrustes-fix every local basis to ``ref``, average,
-    orthonormalize — exactly one refinement round.
+    """Algorithm 1 (one-shot Procrustes fixing): align every local basis
+    to ``ref`` (eq. (5)/(6)), average, orthonormalize — exactly one
+    refinement round.
 
     Args:
-      vs:  (m, d, r) stacked local solutions.
+      vs:  (m, d, r) stacked local solutions (Algorithm 1 step 1 output).
       ref: (d, r) reference solution; defaults to ``vs[0]`` per the paper.
       backend: "xla" (pure jnp), "pallas" (kernel stages), or "auto"
-        (kernels on TPU, XLA elsewhere).
-      polar: "svd" (closed-form rotation) or "newton-schulz" (matmul-only).
-      orth: "qr" (thin Householder QR) or "cholesky-qr2" (matmul +
-        triangular solve; fully fused on the pallas backend).  See the
-        module docstring.
+        (kernels on TPU, XLA elsewhere).  Default "xla".
+      polar: "svd" (the closed form, eq. (6)) or "newton-schulz"
+        (matmul-only).  Default "svd".
+      orth: "qr" (thin Householder QR, the paper's step 4) or
+        "cholesky-qr2" (matmul + triangular solve; fully fused on the
+        pallas backend).  Default "qr".  See the module docstring.
+      plan: ``None`` (legacy per-knob resolution) | ``"auto"`` (the
+        ``repro.plan`` cost model decides the free knobs) | a
+        ``repro.plan.Plan``.
     """
     return refinement_rounds(
-        vs, ref, n_iter=1, backend=backend, polar=polar, orth=orth
+        vs, ref, n_iter=1, backend=backend, polar=polar, orth=orth, plan=plan
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_iter", "backend", "polar", "orth")
+    jax.jit, static_argnames=("n_iter", "backend", "polar", "orth", "plan")
 )
 def iterative_refinement(
     vs: jax.Array,
     n_iter: int = 2,
     *,
-    backend: str = "xla",
-    polar: str = "svd",
-    orth: str = "qr",
+    backend: str | None = None,
+    polar: str | None = None,
+    orth: str | None = None,
+    plan=None,
 ) -> jax.Array:
     """Algorithm 2: repeat Algorithm 1, re-using the output as the reference.
 
     ``n_iter=1`` is exactly Algorithm 1 with the default reference.
-    ``backend`` / ``polar`` / ``orth`` are threaded through every round's
-    aggregation (see ``refinement_rounds``).
+    ``backend`` / ``polar`` / ``orth`` / ``plan`` are threaded through
+    every round's aggregation (see ``refinement_rounds``).
     """
     return refinement_rounds(
-        vs, n_iter=n_iter, backend=backend, polar=polar, orth=orth
+        vs, n_iter=n_iter, backend=backend, polar=polar, orth=orth, plan=plan
     )
 
 

@@ -100,9 +100,11 @@ def polar_factor(
 ) -> jax.Array:
     """Orthogonal polar factor of ``g`` (the Procrustes rotation for its Gram).
 
-    ``polar="svd"`` computes ``U @ Wt`` from the SVD; ``"newton-schulz"``
-    runs the matmul-only iteration (see ``newton_schulz_polar``).  Batched
-    over leading dimensions either way.
+    This is the paper's eq. (6): the minimizer of eq. (5) is the
+    orthogonal polar factor of ``G = srcᵀ ref``.  ``polar="svd"``
+    computes ``U @ Wt`` from the SVD (the closed form as written in the
+    paper); ``"newton-schulz"`` runs the matmul-only iteration (see
+    ``newton_schulz_polar``).  Batched over leading dimensions either way.
     """
     if resolve_polar(polar) == "newton-schulz":
         return newton_schulz_polar(g, iters=ns_iters)
@@ -115,6 +117,9 @@ def procrustes_rotation(
 ) -> jax.Array:
     """Return the orthogonal ``Z`` (r x r) minimising ``||src @ Z - ref||_F``.
 
+    The paper's eq. (5) (solved in closed form via eq. (6) /
+    ``polar_factor``) — Algorithm 1's alignment step for one machine.
+
     Args:
       src: (d, r) matrix with (approximately) orthonormal columns.
       ref: (d, r) reference matrix.
@@ -125,14 +130,17 @@ def procrustes_rotation(
 
 
 def align(src: jax.Array, ref: jax.Array, *, polar: str = "svd") -> jax.Array:
-    """Procrustes-align ``src`` to ``ref``: returns ``src @ Z``."""
+    """Procrustes-align ``src`` to ``ref``: returns ``src @ Z`` with ``Z``
+    the eq. (5) minimizer."""
     return src @ procrustes_rotation(src, ref, polar=polar)
 
 
 def align_batch(
     srcs: jax.Array, ref: jax.Array, *, polar: str = "svd"
 ) -> jax.Array:
-    """Align a stack of local solutions (m, d, r) to a common reference (d, r)."""
+    """Align a stack of local solutions (m, d, r) to a common reference
+    (d, r) — Algorithm 1's alignment step over all m machines; the
+    average of the result is Algorithm 1's step 3."""
     return jax.vmap(lambda v: align(v, ref, polar=polar))(srcs)
 
 

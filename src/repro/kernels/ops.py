@@ -49,7 +49,12 @@ def resolve_backend(backend: str) -> str:
     """Resolve a ``backend=`` switch ("xla" | "pallas" | "auto") to a
     concrete choice: "auto" picks the compiled Pallas kernels on TPU and the
     pure-XLA oracle elsewhere (interpret mode is a correctness path, not a
-    performance one).  Explicit "pallas" is honoured on any backend."""
+    performance one).  Explicit "pallas" is honoured on any backend.
+
+    This is the legacy on-TPU rule that ``repro.plan``'s ``plan=None``
+    path delegates to; ``BACKENDS`` is the single valid-values home the
+    planner registry re-exports.  The cost-model-driven choice is
+    ``plan="auto"`` on the aggregation entry points."""
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     if backend == "auto":

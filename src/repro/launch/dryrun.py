@@ -313,8 +313,10 @@ def _gb(x):
 
 def dryrun_paper_pca(
     *, multi_pod: bool = False, device_count=None, verbose=True,
-    backend: str = "xla", polar: str = "svd", orth: str = "qr",
-    topology: str = "auto",
+    backend: Optional[str] = None, polar: Optional[str] = None,
+    orth: Optional[str] = None, topology: Optional[str] = None,
+    plan=None, explain: bool = False, calibration=None,
+    plan_device: Optional[str] = None,
 ):
     """Dry-run the paper's own workload (distributed PCA, Algorithm 2).
 
@@ -328,19 +330,42 @@ def dryrun_paper_pca(
     SVD-free, which the HLO accounting reflects.  ``orth`` selects the
     per-round orthonormalization ("qr" | "cholesky-qr2"); the SVD- and
     Householder-free cell is (pallas, newton-schulz, cholesky-qr2).
+
+    ``plan=None|"auto"|Plan`` resolves all four through the execution
+    planner (``repro.plan``); ``explain=True`` prints the scored plan
+    table for the job's (m, d, r) before lowering.  The record carries
+    the resolved plan and its prediction either way.  ``plan_device``
+    sets which device model the planner scores against (e.g. ``"tpu"``
+    to plan for the v5e target this harness's roofline prices); the
+    default is the host device so the planned cell's lowered graph keeps
+    well-defined XLA cost analysis (planning pallas cells on a non-TPU
+    host lowers them in interpret mode, whose ``pallas_call`` is opaque
+    to ``cost_analysis()`` — DESIGN.md §7).
     """
-    from repro.comm import comm_cost, resolve_topology
+    from repro import plan as planlib
+    from repro.comm import comm_cost
     from repro.configs.paper_pca import CONFIG as pcfg
     from repro.core.distributed import distributed_pca
 
     mesh = _mesh_for(multi_pod, device_count)
     chips = mesh.size
     n_data = mesh.shape["data"] * (mesh.shape.get("pod", 1))
-    topo = resolve_topology(topology, backend)
     # The aggregation collective runs over the "data" axis only.
-    cost = comm_cost(
-        topo, m=mesh.shape["data"], d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter
+    m_agg = mesh.shape["data"]
+    pl = planlib.resolve_plan(
+        plan, m=m_agg, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter,
+        backend=backend, topology=topology, polar=polar, orth=orth,
+        calibration=calibration, device_kind=plan_device,
     )
+    if explain:
+        _, table = planlib.explain(
+            m=m_agg, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter,
+            backend=backend, topology=topology, polar=polar, orth=orth,
+            calibration=calibration, plan=pl, device_kind=plan_device,
+        )
+        print(table)
+    topo = pl.topology
+    cost = comm_cost(topo, m=m_agg, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter)
     samples_like = jax.ShapeDtypeStruct(
         (n_data * pcfg.n_per_shard, pcfg.d), jnp.float32
     )
@@ -349,10 +374,11 @@ def dryrun_paper_pca(
         "shape": f"d{pcfg.d}_r{pcfg.r}_n{pcfg.n_per_shard}",
         "multi_pod": multi_pod,
         "kind": "eigen",
-        "backend": backend,
-        "polar": polar,
-        "orth": orth,
+        "backend": pl.backend,
+        "polar": pl.polar,
+        "orth": pl.orth,
         "topology": topo,
+        "plan_source": pl.source,
         "predicted_collective_words": cost.words,
         # f32 bases: one word = 4 bytes; directly comparable to the
         # aggregation's share of ``collective_breakdown`` below.
@@ -367,7 +393,7 @@ def dryrun_paper_pca(
         return distributed_pca(
             samples, mesh, pcfg.r,
             n_iter=pcfg.n_iter, solver=pcfg.solver, iters=pcfg.solver_iters,
-            backend=backend, polar=polar, orth=orth, topology=topology,
+            plan=pl,
         )
 
     lowered = jax.jit(job).lower(samples_like)
@@ -399,21 +425,47 @@ def main():
     ap.add_argument("--single-pod", action="store_true")
     ap.add_argument("--eigen", action="store_true",
                     help="train_step with eigen-compressed DP gradients")
+    from repro.plan import (
+        BACKEND_CHOICES,
+        ORTH_CHOICES,
+        PLAN_CHOICES,
+        POLAR_CHOICES,
+        TOPOLOGY_CHOICES,
+    )
+
     ap.add_argument("--paper-pca", action="store_true")
-    ap.add_argument("--backend", default="xla",
-                    choices=["xla", "pallas", "auto"],
-                    help="aggregation path for --paper-pca")
-    ap.add_argument("--polar", default="svd",
-                    choices=["svd", "newton-schulz"],
-                    help="r x r polar factor for --paper-pca")
-    ap.add_argument("--orth", default="qr",
-                    choices=["qr", "cholesky-qr2"],
-                    help="per-round orthonormalization for --paper-pca")
-    ap.add_argument("--topology", default="auto",
-                    choices=["psum", "gather", "ring", "auto"],
+    ap.add_argument("--backend", default=None, choices=BACKEND_CHOICES,
+                    help="aggregation path for --paper-pca (default xla, "
+                         "or planner-chosen under --plan auto)")
+    ap.add_argument("--polar", default=None, choices=POLAR_CHOICES,
+                    help="r x r polar factor for --paper-pca (default "
+                         "svd, or planner-chosen under --plan auto)")
+    ap.add_argument("--orth", default=None, choices=ORTH_CHOICES,
+                    help="per-round orthonormalization for --paper-pca "
+                         "(default qr, or planner-chosen under --plan auto)")
+    ap.add_argument("--topology", default="auto", choices=TOPOLOGY_CHOICES,
                     help="communication schedule for --paper-pca "
                          "(repro.comm); the record carries the cost-model "
                          "prediction next to the measured HLO bytes")
+    ap.add_argument("--plan", default="none", choices=PLAN_CHOICES,
+                    help="'auto': resolve the four --paper-pca knobs with "
+                         "the repro.plan cost model (explicit flags are "
+                         "pins); 'none': legacy per-knob resolution")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the scored plan table for --paper-pca "
+                         "before lowering")
+    ap.add_argument("--calibrate", default=None, metavar="BENCH_JSON",
+                    help="refine the planner's constants from a recorded "
+                         "bench_aggregate sweep (consulted when the "
+                         "planner runs, i.e. under --plan auto)")
+    ap.add_argument("--plan-device", default=None,
+                    choices=["cpu", "tpu", "gpu"],
+                    help="device model the planner scores against; "
+                         "default: the host device, so the planned cell "
+                         "keeps well-defined cost analysis (pallas cells "
+                         "lower interpret-mode/opaque off-TPU).  Use "
+                         "'tpu' to plan for the v5e target the roofline "
+                         "prices")
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--device-count", type=int, default=512,
                     help="reduced placeholder device count for CI smoke")
@@ -477,9 +529,17 @@ def main():
         path = os.path.join(args.out, tag + ".json")
         try:
             if arch == "paper-pca":
+                cal = None
+                if args.calibrate:
+                    from repro.plan import load_calibration
+
+                    cal = load_calibration(args.calibrate)
                 rec = dryrun_paper_pca(multi_pod=mp, device_count=args.device_count,
                                        backend=args.backend, polar=args.polar,
-                                       orth=args.orth, topology=args.topology)
+                                       orth=args.orth, topology=args.topology,
+                                       plan="auto" if args.plan == "auto" else None,
+                                       explain=args.explain, calibration=cal,
+                                       plan_device=args.plan_device)
             else:
                 rec = dryrun_cell(
                     arch, shape, multi_pod=mp, eigen=args.eigen,

@@ -5,6 +5,15 @@
 Runs one-shot Procrustes-fixed distributed PCA over the host mesh's data
 axis and reports subspace distances vs. the centralized estimator — the
 production entry point for the algorithm the paper contributes.
+
+``--plan auto`` hands the four execution knobs (``--backend``,
+``--topology``, ``--polar``, ``--orth``; any explicitly passed flag
+stays a pin) to the cost-model planner (``repro.plan``); ``--explain``
+prints the scored plan table — every cell's predicted communication
+words (the verified ``repro.comm.comm_cost`` model, byte for byte),
+FLOPs, and roofline terms, with the chosen cell marked.  ``--calibrate
+BENCH_aggregate.json`` refines the planner's latency/throughput
+constants from a recorded sweep on this machine.
 """
 
 from __future__ import annotations
@@ -42,13 +51,31 @@ def run(
     iters: int = 40,
     seed: int = 0,
     mesh=None,
-    backend: str = "xla",
-    polar: str = "svd",
-    orth: str = "qr",
-    topology: str = "auto",
+    backend: str | None = None,
+    polar: str | None = None,
+    orth: str | None = None,
+    topology: str | None = None,
+    plan=None,
+    explain: bool = False,
+    calibration=None,
 ):
+    from repro import plan as planlib
+
     mesh = mesh or make_host_mesh(model=1)
     m = mesh.shape["data"]
+    # One resolution for the whole job: the collective, the shard-local
+    # covariance backend, and the printed table all see the same Plan.
+    pl = planlib.resolve_plan(
+        plan, m=m, d=d, r=r, n_iter=n_iter, backend=backend,
+        topology=topology, polar=polar, orth=orth, calibration=calibration,
+    )
+    if explain:
+        _, table = planlib.explain(
+            m=m, d=d, r=r, n_iter=n_iter, backend=backend,
+            topology=topology, polar=polar, orth=orth,
+            calibration=calibration, plan=pl,
+        )
+        print(table)
     key = jax.random.PRNGKey(seed)
     k1, k2 = jax.random.split(key)
     tau = syn.spectrum_m1(d, r, delta=delta)
@@ -58,8 +85,7 @@ def run(
 
     t0 = time.perf_counter()
     v_dist = distributed_pca(
-        samples, mesh, r, n_iter=n_iter, solver=solver, iters=iters,
-        backend=backend, polar=polar, orth=orth, topology=topology,
+        samples, mesh, r, n_iter=n_iter, solver=solver, iters=iters, plan=pl,
     )
     v_dist.block_until_ready()
     t_dist = time.perf_counter() - t0
@@ -73,10 +99,14 @@ def run(
         "n": n_per_shard,
         "d": d,
         "r": r,
-        "backend": backend,
-        "polar": polar,
-        "orth": orth,
-        "topology": topology,
+        # The *resolved* execution plan (what actually ran).
+        "backend": pl.backend,
+        "polar": pl.polar,
+        "orth": pl.orth,
+        "topology": pl.topology,
+        "ring_chunk": pl.ring_chunk,
+        "plan_source": pl.source,
+        "predicted_words": pl.words,
         "dist_aligned": float(dist_2(v_dist, v1)),
         "dist_central": float(dist_2(v_cent, v1)),
         "dist_naive": float(dist_2(naive_average(vs), v1)),
@@ -87,36 +117,66 @@ def run(
 
 
 def main():
+    from repro.plan import (
+        BACKEND_CHOICES,
+        ORTH_CHOICES,
+        PLAN_CHOICES,
+        POLAR_CHOICES,
+        TOPOLOGY_CHOICES,
+        load_calibration,
+    )
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--d", type=int, default=256)
     ap.add_argument("--r", type=int, default=8)
     ap.add_argument("--n-per-shard", type=int, default=1024)
     ap.add_argument("--n-iter", type=int, default=2)
     ap.add_argument("--solver", default="subspace", choices=["subspace", "eigh"])
-    ap.add_argument("--backend", default="auto", choices=["xla", "pallas", "auto"],
+    ap.add_argument("--backend", default="auto", choices=BACKEND_CHOICES,
                     help="aggregation path: pure XLA, Pallas kernels, or "
                          "auto (kernels on TPU)")
-    ap.add_argument("--polar", default="svd", choices=["svd", "newton-schulz"],
+    ap.add_argument("--polar", default=None, choices=POLAR_CHOICES,
                     help="r x r polar factor: closed-form SVD or the "
                          "matmul-only Newton-Schulz iteration (fused "
-                         "in-kernel on the pallas backend)")
-    ap.add_argument("--orth", default="qr", choices=["qr", "cholesky-qr2"],
+                         "in-kernel on the pallas backend); default svd, "
+                         "or planner-chosen under --plan auto")
+    ap.add_argument("--orth", default=None, choices=ORTH_CHOICES,
                     help="per-round orthonormalization: thin Householder "
                          "QR or CholeskyQR2 (with --backend pallas "
                          "--polar newton-schulz the whole round fuses "
-                         "into a single kernel launch)")
-    ap.add_argument("--topology", default="auto",
-                    choices=["psum", "gather", "ring", "auto"],
+                         "into a single kernel launch); default qr, or "
+                         "planner-chosen under --plan auto")
+    ap.add_argument("--topology", default="auto", choices=TOPOLOGY_CHOICES,
                     help="communication schedule of the aggregation "
                          "(repro.comm): psum all-reduces, coordinator "
                          "all-gather, or the overlapped ring; auto keeps "
-                         "the historical backend pairing")
+                         "the historical backend pairing (or defers to "
+                         "the planner under --plan auto)")
+    ap.add_argument("--plan", default="none", choices=PLAN_CHOICES,
+                    help="'auto': score every (backend x topology x polar "
+                         "x orth) cell with the repro.plan cost model and "
+                         "run the cheapest (explicit knob flags act as "
+                         "pins); 'none': legacy per-knob resolution")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the scored plan table (predicted words / "
+                         "flops / roofline terms per cell, chosen cell "
+                         "marked) before running")
+    ap.add_argument("--calibrate", default=None, metavar="BENCH_JSON",
+                    help="refine the planner's constants from a recorded "
+                         "bench_aggregate sweep (e.g. BENCH_aggregate.json); "
+                         "only consulted when the planner runs, i.e. with "
+                         "--plan auto (or --polar/--orth auto)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
+    plan = "auto" if args.plan == "auto" else None
+    # Under --plan auto, unspecified/"auto" flags are free axes the
+    # planner decides; an explicitly passed concrete flag is a pin.
+    cal = load_calibration(args.calibrate) if args.calibrate else None
     _, stats = run(
         args.d, args.r, args.n_per_shard, n_iter=args.n_iter,
         solver=args.solver, backend=args.backend, polar=args.polar,
-        orth=args.orth, topology=args.topology,
+        orth=args.orth, topology=args.topology, plan=plan,
+        explain=args.explain, calibration=cal,
     )
     for k, v in stats.items():
         print(f"{k}: {v}")

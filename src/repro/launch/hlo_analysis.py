@@ -5,19 +5,29 @@ collective op's operand bytes gives the per-device bytes placed on the wire
 per step (equivalently: the brief's total-bytes / chips).  The roofline
 collective term is that divided by the per-link ICI bandwidth.
 
-Hardware constants (TPU v5e target, from the brief):
-  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+The hardware constants and the roofline arithmetic live in
+``repro.plan.roofline`` (the planner prices hypothetical cells against
+the same numbers this module uses to score compiled modules); this
+module keeps the HLO *parsing* plus the legacy ``PEAK_FLOPS`` /
+``HBM_BW`` / ``ICI_BW`` / ``RooflineTerms`` names as re-exports —
+TPU v5e target from the brief: 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import re
-from typing import Dict, Optional
+from typing import Dict
 
-PEAK_FLOPS = 197e12  # bf16 per chip
-HBM_BW = 819e9  # bytes/s per chip
-ICI_BW = 50e9  # bytes/s per link
+from repro.plan.roofline import (  # noqa: F401  (re-exported legacy names)
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    TPU_V5E,
+    RooflineTerms,
+    model_flops,
+    roofline_terms,
+)
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
@@ -95,22 +105,6 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return out
 
 
-@dataclasses.dataclass
-class RooflineTerms:
-    flops: float               # per-device HLO flops
-    hbm_bytes: float           # per-device bytes accessed
-    coll_bytes: float          # per-device collective wire bytes
-    chips: int
-    compute_s: float
-    memory_s: float
-    collective_s: float
-    bottleneck: str
-    coll_breakdown: Dict[str, int]
-
-    def as_dict(self):
-        return dataclasses.asdict(self)
-
-
 def roofline(
     cost: Dict[str, float],
     hlo_text: str,
@@ -119,35 +113,11 @@ def roofline(
     """Derive the three roofline terms from cost_analysis + partitioned HLO.
 
     cost_analysis flops/bytes on the partitioned module are per-device
-    already; terms are seconds per step on the target hardware.
+    already; terms are seconds per step on the target hardware (the
+    arithmetic is ``repro.plan.roofline.roofline_terms`` against the TPU
+    v5e model; this wrapper adds the HLO collective parsing).
     """
     flops = float(cost.get("flops", 0.0))
     hbm = float(cost.get("bytes accessed", 0.0))
     coll = collective_bytes(hlo_text)
-    coll_total = float(sum(coll.values()))
-    compute_s = flops / PEAK_FLOPS
-    memory_s = hbm / HBM_BW
-    collective_s = coll_total / ICI_BW
-    terms = {
-        "compute": compute_s,
-        "memory": memory_s,
-        "collective": collective_s,
-    }
-    bottleneck = max(terms, key=terms.get)
-    return RooflineTerms(
-        flops=flops,
-        hbm_bytes=hbm,
-        coll_bytes=coll_total,
-        chips=chips,
-        compute_s=compute_s,
-        memory_s=memory_s,
-        collective_s=collective_s,
-        bottleneck=bottleneck,
-        coll_breakdown=coll,
-    )
-
-
-def model_flops(n_active_params: float, tokens: float, kind: str = "train") -> float:
-    """6·N·D for train (fwd+bwd), 2·N·D for inference forward."""
-    mult = 6.0 if kind == "train" else 2.0
-    return mult * n_active_params * tokens
+    return roofline_terms(flops, hbm, coll, chips, device=TPU_V5E)

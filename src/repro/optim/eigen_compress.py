@@ -49,6 +49,10 @@ class EigenCompressConfig:
     # "psum" is right for the in-train-step setting: the refresh aligns to
     # an existing reference most steps, so a round is one d*r all-reduce.
     topology: str = "psum"
+    # Execution plan of the refresh collective: None (legacy; the knobs
+    # above apply as-is), "auto" (the repro.plan cost model decides the
+    # free knobs, with `topology` as a pin), or a concrete repro.plan.Plan.
+    plan: Optional[Any] = None
     error_feedback: bool = True
     bf16_psum: bool = False  # bf16 all-reduce for UNcompressed leaves
 
@@ -114,11 +118,11 @@ def refresh_basis(
         # Align against previous basis when initialized, else shard-0 default.
         v_prev = procrustes_average_collective(
             v_loc, axis_name=axis_name, n_iter=cfg.n_iter, ref=prev,
-            topology=cfg.topology,
+            topology=cfg.topology, plan=cfg.plan,
         )
         v_new = procrustes_average_collective(
             v_loc, axis_name=axis_name, n_iter=cfg.n_iter,
-            topology=cfg.topology,
+            topology=cfg.topology, plan=cfg.plan,
         )
         return jnp.where(initialized, v_prev, v_new)
 

@@ -28,10 +28,11 @@ def distributed_spectral_init(
     n_iter: int = 10,
     solver: str = "eigh",
     iters: int = 40,
-    backend: str = "xla",
-    polar: str = "svd",
-    orth: str = "qr",
-    topology: str = "auto",
+    backend: str | None = None,
+    polar: str | None = None,
+    orth: str | None = None,
+    topology: str | None = None,
+    plan=None,
 ) -> jax.Array:
     """a: (N, d) design vectors, y: (N,) measurements, sharded over the mesh.
 
@@ -39,16 +40,23 @@ def distributed_spectral_init(
     ``polar`` the rotation method ("svd" | "newton-schulz"), ``orth``
     the per-round orthonormalization ("qr" | "cholesky-qr2"), and
     ``topology`` the communication schedule ("psum" | "gather" | "ring" |
-    "auto"), see ``repro.core.distributed`` / ``repro.comm``.  Returns the
-    (d, r) Procrustes-averaged spectral initialiser X_0.
+    "auto"), see ``repro.core.distributed`` / ``repro.comm``.
+    ``plan=None|"auto"|Plan`` resolves all four through the execution
+    planner (``repro.plan``), resolved once here at the driver level.
+    Returns the (d, r) Procrustes-averaged spectral initialiser X_0.
     """
+    from repro.plan.planner import resolve_plan
+
+    pl = resolve_plan(
+        plan, m=mesh.shape[data_axis], d=a.shape[-1], r=r, n_iter=n_iter,
+        backend=backend, topology=topology, polar=polar, orth=orth,
+    )
 
     def shard_fn(a_s, y_s):
         d_n = truncated_second_moment(a_s, y_s)
         v, _ = local_eigenbasis(d_n, r, method=solver, iters=iters)
         out = procrustes_average_collective(
-            v, axis_name=data_axis, n_iter=n_iter,
-            backend=backend, polar=polar, orth=orth, topology=topology,
+            v, axis_name=data_axis, n_iter=n_iter, plan=pl,
         )
         return out[None]
 

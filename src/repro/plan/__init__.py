@@ -1,0 +1,48 @@
+"""Execution planner: one documented decision over the four knobs.
+
+``repro.plan`` turns the aggregation's four independent switches
+(``backend`` x ``topology`` x ``polar`` x ``orth``) plus ``ring_chunk``
+into a single cost-model-driven decision:
+
+  * ``plan_aggregation(m=..., d=..., r=...)`` scores every valid cell
+    with the verified ``repro.comm.comm_cost`` words model plus the
+    ``repro.plan.roofline`` compute/bandwidth/latency model and returns
+    the cheapest feasible ``Plan``;
+  * every aggregation entry point takes ``plan=None|"auto"|Plan`` and
+    funnels through ``resolve_plan`` (``None`` is byte-identical legacy
+    behavior);
+  * ``explain()`` renders the scored table (the CLIs' ``--explain``);
+  * ``repro.plan.calibration`` refines the device constants from a
+    recorded ``BENCH_aggregate.json``.
+
+Layering: above ``repro.comm`` / ``repro.core`` / ``repro.kernels``
+(whose registries it re-exports as the single valid-values home), below
+``repro.launch``.  DESIGN.md §"Planner" documents the scoring formula.
+"""
+
+from repro.plan.calibration import Calibration, load_calibration  # noqa: F401
+from repro.plan.planner import (  # noqa: F401
+    BACKEND_CHOICES,
+    BACKENDS_CONCRETE,
+    CellScore,
+    MIN_RING_CHUNK,
+    ORTH_CHOICES,
+    PLAN_CHOICES,
+    POLAR_CHOICES,
+    Plan,
+    TOPOLOGY_CHOICES,
+    choose_ring_chunk,
+    explain,
+    format_plan_table,
+    plan_aggregation,
+    resolve_plan,
+    score_cells,
+    stacked_round_flops,
+)
+from repro.plan.roofline import (  # noqa: F401
+    DEVICE_MODELS,
+    DeviceModel,
+    RooflineTerms,
+    device_model,
+    roofline_terms,
+)

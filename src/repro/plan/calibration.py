@@ -1,0 +1,110 @@
+"""Planner calibration from a recorded ``BENCH_aggregate.json`` sweep.
+
+The planner's latency constants (``DeviceModel``) are priors; a recorded
+aggregation sweep on the target machine measures two of them directly:
+
+  * **dispatch overhead** — the smallest-work compiled stacked cells'
+    wall time is dominated by per-call dispatch, so the minimum
+    ``wall_us_min`` over those cells estimates the per-launch overhead;
+  * **effective FLOP rate** — the largest-work compiled stacked cell,
+    after subtracting the dispatch estimate, gives an achieved
+    flops/second for the round kernels (usually far below nameplate
+    peak, which is the point of measuring).
+
+Only ``mode == "compiled"`` records are used (interpret-mode walls price
+the Pallas interpreter, not the hardware — see DESIGN.md §6) and only
+when the sweep's recorded platform matches the device kind being
+planned; a mismatched or empty calibration degrades to a no-op rather
+than poisoning the model.  Wall-time **minimums** are used throughout
+for the same reason the §6 perf gate uses them: contention only ever
+inflates a wall time.
+
+Format: the standard ``bench_aggregate/v1..v3`` files written by
+``benchmarks/bench_aggregate.py`` (``{"schema": ..., "meta":
+{"platform": ...}, "records": [...]}``); no planner-specific artifact is
+needed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional
+
+__all__ = ["Calibration", "load_calibration"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Measured constants to refine a ``DeviceModel`` with.
+
+    ``dispatch_s`` / ``flops_per_s`` may each be ``None`` when the sweep
+    had no usable records for them; ``DeviceModel.calibrated`` treats
+    ``None`` as "keep the prior".
+    """
+
+    platform: str
+    dispatch_s: Optional[float] = None
+    flops_per_s: Optional[float] = None
+    cells: int = 0
+    source: str = ""
+
+    def applies_to(self, device_kind: str) -> bool:
+        return bool(self.platform) and self.platform == device_kind
+
+    @classmethod
+    def from_records(
+        cls, platform: str, records: List[Dict[str, Any]], source: str = ""
+    ) -> "Calibration":
+        """Estimate (dispatch, flop rate) from compiled stacked records.
+
+        Stacked (single-process) cells are used because their wall time
+        is one jitted call with no shard_map scheduling noise; the work
+        model is the planner's own stacked-round flop count, so the
+        calibration and the scoring price the same arithmetic.
+        """
+        from repro.plan.planner import stacked_round_flops
+
+        usable = [
+            r for r in records
+            if r.get("topology") == "stacked"
+            and r.get("mode") == "compiled"
+            and r.get("wall_us_min", r.get("wall_us", 0)) > 0
+        ]
+        if not usable:
+            return cls(platform=platform, cells=0, source=source)
+
+        def wall_s(r: Dict[str, Any]) -> float:
+            wall = r.get("wall_us_min")
+            if wall is None:
+                wall = r["wall_us"]
+            return float(wall) * 1e-6
+
+        def work(r: Dict[str, Any]) -> float:
+            return stacked_round_flops(
+                m=r["m"], d=r["d"], r=r["r"], n_iter=r.get("n_iter", 1),
+                polar=r.get("polar", "svd"), orth=r.get("orth", "qr"),
+            )
+
+        dispatch_s = min(wall_s(r) for r in usable)
+        heaviest = max(usable, key=work)
+        flops_per_s: Optional[float] = None
+        residual = wall_s(heaviest) - dispatch_s
+        if residual > 0 and work(heaviest) > 0:
+            flops_per_s = work(heaviest) / residual
+        return cls(
+            platform=platform,
+            dispatch_s=dispatch_s,
+            flops_per_s=flops_per_s,
+            cells=len(usable),
+            source=source,
+        )
+
+
+def load_calibration(path: str) -> Calibration:
+    """Load a ``bench_aggregate`` JSON file into a ``Calibration``."""
+    with open(path) as f:
+        data = json.load(f)
+    platform = str(data.get("meta", {}).get("platform", ""))
+    records = data.get("records", [])
+    return Calibration.from_records(platform, records, source=path)

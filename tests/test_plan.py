@@ -1,0 +1,493 @@
+"""The execution planner (``repro.plan``).
+
+Five properties are pinned down:
+
+1. Registry single-home: the planner's valid-values tuples are the same
+   objects the base vocabularies own, and ``resolve_topology``'s error
+   message renders exactly ``TOPOLOGY_CHOICES`` — the two cannot drift.
+2. Legacy parity: ``plan=None`` reproduces the per-knob resolution
+   byte for byte, and on a 1-shard axis ``plan="auto"`` returns the
+   historical ``resolve_topology`` pairing for every backend pin.
+3. Golden plans: canonical (m, d, r, device) regimes resolve to the
+   documented cells (DESIGN.md §8.4), the chosen cell's predicted words
+   equal ``comm_cost(...).words`` exactly, and per-cell predicted
+   words/flops are monotone in each of m, d, r, n_iter.
+4. The ``ring_chunk`` rule (§8.2): latency-bound bases ship whole,
+   large-d bases chunk at the latency-bandwidth product with the
+   MIN_RING_CHUNK floor, explicit chunks are honoured.
+5. End-to-end: ``plan="auto"`` through the public aggregation API
+   agrees with the serial oracle across every (backend x topology) pin
+   combination (m=1 fast; m=8 in a subprocess), and the CLIs' --explain
+   chosen-cell words match the model.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import REPO, SRC, run_with_devices, subspace_dist64
+
+from repro.comm import DEFAULT_RING_CHUNK, TOPOLOGIES, comm_cost, resolve_topology
+from repro.kernels.ops import resolve_backend
+from repro.plan import (
+    BACKENDS_CONCRETE,
+    Calibration,
+    ORTH_CHOICES,
+    POLAR_CHOICES,
+    Plan,
+    TOPOLOGY_CHOICES,
+    choose_ring_chunk,
+    device_model,
+    load_calibration,
+    plan_aggregation,
+    resolve_plan,
+    score_cells,
+)
+
+BACKENDS = ["xla", "pallas"]
+
+
+# ------------------------------------------------------------- registry --
+
+
+def test_choice_registries_are_single_homed():
+    import repro.comm.topology as T
+    from repro.core.orthonorm import ORTH_METHODS
+    from repro.core.procrustes import POLAR_METHODS
+
+    assert TOPOLOGY_CHOICES is T.TOPOLOGY_CHOICES
+    assert TOPOLOGY_CHOICES == TOPOLOGIES + ("auto",)
+    assert POLAR_CHOICES == POLAR_METHODS + ("auto",)
+    assert ORTH_CHOICES == ORTH_METHODS + ("auto",)
+    assert BACKENDS_CONCRETE == ("xla", "pallas")
+
+
+def test_resolve_topology_error_lists_the_registry():
+    """The error message is rendered from TOPOLOGY_CHOICES itself, so the
+    listed valid values cannot drift from the planner's registry."""
+    with pytest.raises(ValueError) as ei:
+        resolve_topology("coordinator")
+    assert str(TOPOLOGY_CHOICES) in str(ei.value)
+
+
+def test_invalid_pins_raise():
+    with pytest.raises(ValueError):
+        plan_aggregation(m=4, d=64, r=4, backend="mosaic", device_kind="cpu")
+    with pytest.raises(ValueError):
+        plan_aggregation(m=4, d=64, r=4, topology="tree", device_kind="cpu")
+    with pytest.raises(ValueError):
+        resolve_plan("fastest", m=4, d=64, r=4)
+
+
+# ---------------------------------------------------------- legacy parity --
+
+
+def test_plan_none_is_the_legacy_resolution():
+    for backend in (None, "xla", "pallas", "auto"):
+        for topology in (None, "psum", "gather", "ring", "auto"):
+            pl = resolve_plan(
+                None, m=8, d=96, r=4, n_iter=2,
+                backend=backend, topology=topology,
+            )
+            b_legacy = resolve_backend(backend if backend is not None else "xla")
+            assert pl.backend == b_legacy
+            assert pl.topology == resolve_topology(topology or "auto", b_legacy)
+            assert (pl.polar, pl.orth) == ("svd", "qr")
+            assert pl.ring_chunk == DEFAULT_RING_CHUNK
+            assert pl.source == "legacy"
+
+
+def test_plan_auto_reproduces_legacy_topology_on_one_shard_axis():
+    """The satellite guarantee: on a 1-device mesh every schedule is the
+    same program, and the planner returns today's resolve_topology picks
+    rather than an arbitrary tie-winner."""
+    for backend in (None, "xla", "pallas"):
+        pl = plan_aggregation(
+            m=1, d=256, r=8, n_iter=2, device_kind="cpu", backend=backend,
+        )
+        assert pl.topology == resolve_topology("auto", backend or "xla"), pl
+    # And with everything free on the CPU host, the full legacy cell.
+    pl = plan_aggregation(m=1, d=256, r=8, n_iter=2, device_kind="cpu")
+    assert (pl.backend, pl.topology, pl.polar, pl.orth) == (
+        "xla", "psum", "svd", "qr",
+    )
+
+
+def test_one_shard_axis_pairing_survives_backend_flip():
+    """If a calibration makes the scorer reject the guessed backend on a
+    1-shard axis (e.g. pallas launches priced expensive on TPU), the
+    returned (backend, topology) must still be a legacy pairing — never
+    a mixed cell like (xla, gather)."""
+    cal = Calibration(platform="tpu", dispatch_s=200e-6, cells=1)
+    pl = plan_aggregation(
+        m=1, d=512, r=16, n_iter=2, device_kind="tpu", calibration=cal,
+    )
+    assert pl.topology == resolve_topology("auto", pl.backend), pl
+
+
+def test_legacy_auto_polar_keeps_legacy_ring_chunk():
+    """plan=None with polar="auto" plans only the free knob: the ring
+    chunk stays the legacy DEFAULT_RING_CHUNK, not the planner's rule."""
+    pl = resolve_plan(
+        None, m=8, d=96, r=4, n_iter=2, topology="ring", polar="auto",
+        device_kind="cpu",
+    )
+    assert pl.ring_chunk == DEFAULT_RING_CHUNK
+    assert pl.polar in ("svd", "newton-schulz")
+
+
+def test_plan_passthrough_and_hashability():
+    pl = plan_aggregation(m=8, d=512, r=16, device_kind="tpu")
+    assert resolve_plan(pl, m=8, d=512, r=16) is pl
+    assert hash(pl) == hash(pl)  # usable as a jit static argument
+    # Prediction/provenance fields are compare=False: two plans that run
+    # the same program are equal (no jit retrace on a re-resolved plan).
+    a = Plan("xla", "psum", "svd", "qr", 64, words=1, source="legacy")
+    b = Plan("xla", "psum", "svd", "qr", 64, words=99, source="planner")
+    assert a == b and hash(a) == hash(b)
+
+
+# ------------------------------------------------------------ golden plans --
+
+
+def test_golden_plan_tpu_paper_scale_is_the_fused_round():
+    """Latency-bound paper-scale shapes on TPU: the one-launch fused cell
+    (pallas, gather, newton-schulz, cholesky-qr2) — DESIGN.md §8.4."""
+    pl = plan_aggregation(m=8, d=512, r=16, n_iter=2, device_kind="tpu")
+    assert (pl.backend, pl.topology, pl.polar, pl.orth) == (
+        "pallas", "gather", "newton-schulz", "cholesky-qr2",
+    )
+
+
+def test_golden_plan_tpu_bandwidth_bound_is_psum():
+    """Huge d·r: the wire dominates and psum moves (1+n)·d·r words where
+    the stacked forms move m·d·r — the planner picks psum."""
+    pl = plan_aggregation(m=64, d=65536, r=128, n_iter=1, device_kind="tpu")
+    assert pl.topology == "psum"
+
+
+def test_golden_plan_tpu_xla_pin_flips_to_matmul_only_methods():
+    """With the backend pinned to XLA on TPU, LAPACK latency still makes
+    newton-schulz + cholesky-qr2 the winning methods."""
+    pl = plan_aggregation(
+        m=8, d=512, r=16, n_iter=2, device_kind="tpu", backend="xla",
+    )
+    assert (pl.backend, pl.polar, pl.orth) == (
+        "xla", "newton-schulz", "cholesky-qr2",
+    )
+
+
+def test_golden_plan_cpu_keeps_lapack_methods():
+    """On CPU, LAPACK is cheap and the kernels do not compile: the plan
+    stays on the classic (xla, psum, svd, qr) cell."""
+    pl = plan_aggregation(m=8, d=512, r=16, n_iter=2, device_kind="cpu")
+    assert (pl.backend, pl.topology, pl.polar, pl.orth) == (
+        "xla", "psum", "svd", "qr",
+    )
+
+
+def test_pallas_never_chosen_off_tpu_unless_pinned():
+    cells = score_cells(m=8, d=512, r=16, device_kind="cpu")
+    assert all(not c.feasible for c in cells if c.backend == "pallas")
+    pl = plan_aggregation(m=8, d=512, r=16, device_kind="cpu", backend="pallas")
+    assert pl.backend == "pallas"  # pins are honoured, annotated not overridden
+
+
+def test_gather_memory_guard_surfaces_the_ring():
+    """A (m, d, r) stack over the memory budget makes gather infeasible
+    (unless pinned); the ring — gather-without-the-stack — stays
+    feasible.  DESIGN.md §8.4's 'when the ring surfaces'."""
+    kw = dict(m=2048, d=65536, r=128, n_iter=1, device_kind="tpu")
+    cells = score_cells(**kw)
+    by_topo = {}
+    for c in cells:
+        by_topo.setdefault(c.topology, []).append(c)
+    assert all(not c.feasible for c in by_topo["gather"])
+    assert any(c.feasible for c in by_topo["ring"])
+    # Pinning gather is honoured but annotated.
+    pl = plan_aggregation(**kw, topology="gather")
+    assert pl.topology == "gather"
+
+
+def test_chosen_words_match_comm_cost_exactly():
+    for kw in (
+        dict(m=8, d=512, r=16, n_iter=2, device_kind="tpu"),
+        dict(m=8, d=512, r=16, n_iter=2, device_kind="cpu"),
+        dict(m=64, d=8192, r=128, n_iter=3, device_kind="tpu"),
+        dict(m=2, d=96, r=4, n_iter=1, device_kind="cpu"),
+    ):
+        pl = plan_aggregation(**kw)
+        expect = comm_cost(
+            pl.topology, m=kw["m"], d=kw["d"], r=kw["r"], n_iter=kw["n_iter"]
+        ).words
+        assert pl.words == expect, (kw, pl)
+
+
+def test_every_scored_cell_words_match_comm_cost():
+    m, d, r, n = 8, 512, 16, 2
+    for c in score_cells(m=m, d=d, r=r, n_iter=n, device_kind="tpu"):
+        assert c.words == comm_cost(c.topology, m=m, d=d, r=r, n_iter=n).words
+
+
+# ------------------------------------------------------------ monotonicity --
+
+
+@pytest.mark.parametrize("topology", list(TOPOLOGIES))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_predictions_monotone_in_problem_size(topology, backend):
+    """Within a fixed cell, bigger problems never predict fewer words or
+    flops — the cost model has no sign errors hiding in a regime."""
+    base = dict(m=8, d=512, r=16, n_iter=2)
+
+    def cell(**kw):
+        args = dict(base, **kw)
+        [c] = score_cells(
+            m=args["m"], d=args["d"], r=args["r"], n_iter=args["n_iter"],
+            device_kind="tpu", backend=backend, topology=topology,
+            polar="newton-schulz", orth="cholesky-qr2",
+        )
+        return c
+
+    ref = cell()
+    for knob, bigger in (
+        ("m", 16), ("d", 2048), ("r", 64), ("n_iter", 5),
+    ):
+        grown = cell(**{knob: bigger})
+        assert grown.words >= ref.words, (knob, topology, backend)
+        assert grown.flops >= ref.flops, (knob, topology, backend)
+        assert grown.hbm_bytes >= ref.hbm_bytes, (knob, topology, backend)
+
+
+# ------------------------------------------------------------- ring chunk --
+
+
+def test_ring_chunk_rule():
+    tpu = device_model("tpu")
+    # Latency-bound basis ships whole: chunk == d.
+    assert choose_ring_chunk(512, 16, tpu) == 512
+    # Large d chunks at the latency-bandwidth product / r, floored.
+    big = choose_ring_chunk(8192, 128, tpu)
+    assert big == 256  # floor: MIN_RING_CHUNK
+    mid = choose_ring_chunk(8192, 16, tpu)
+    assert 256 <= mid < 8192
+    # Monotone: more columns -> same or smaller chunks; never over d.
+    for d in (64, 1024, 16384):
+        prev = None
+        for r in (4, 16, 64, 256):
+            c = choose_ring_chunk(d, r, tpu)
+            assert 1 <= c <= d
+            if prev is not None:
+                assert c <= prev
+            prev = c
+
+
+def test_ring_chunk_pin_and_plan_threading():
+    pl = plan_aggregation(
+        m=8, d=96, r=4, device_kind="cpu", topology="ring", ring_chunk=40,
+    )
+    assert (pl.topology, pl.ring_chunk) == ("ring", 40)
+    # Planner-chosen chunk is clamped to d.
+    pl = plan_aggregation(m=8, d=96, r=4, device_kind="cpu", topology="ring")
+    assert 1 <= pl.ring_chunk <= 96
+
+
+# ------------------------------------------------------------- calibration --
+
+
+def test_calibration_from_committed_baseline():
+    cal = load_calibration(os.path.join(REPO, "BENCH_aggregate_tiny.json"))
+    assert cal.platform == "cpu"
+    assert cal.cells > 0
+    assert cal.dispatch_s and cal.dispatch_s > 0
+    assert cal.applies_to("cpu") and not cal.applies_to("tpu")
+    # A calibrated plan still resolves (and stays a valid cell).
+    pl = plan_aggregation(
+        m=8, d=512, r=16, n_iter=2, device_kind="cpu", calibration=cal,
+    )
+    assert pl.backend in BACKENDS and pl.topology in TOPOLOGIES
+
+
+def test_calibration_degrades_to_noop():
+    empty = Calibration.from_records("cpu", [])
+    assert empty.cells == 0 and empty.dispatch_s is None
+    dm = device_model("cpu")
+    assert dm.calibrated(dispatch_s=None, flops_per_s=None) == dm
+    # Interpret-mode records are ignored.
+    recs = [dict(topology="stacked", mode="interpret", wall_us_min=5.0,
+                 m=4, d=64, r=4, n_iter=1, polar="svd", orth="qr")]
+    assert Calibration.from_records("cpu", recs).cells == 0
+
+
+def test_calibration_refines_device_model():
+    recs = [
+        dict(topology="stacked", mode="compiled", wall_us_min=100.0,
+             m=4, d=64, r=4, n_iter=1, polar="svd", orth="qr"),
+        dict(topology="stacked", mode="compiled", wall_us_min=9000.0,
+             m=16, d=4096, r=64, n_iter=2, polar="svd", orth="qr"),
+    ]
+    cal = Calibration.from_records("cpu", recs)
+    assert cal.dispatch_s == pytest.approx(100e-6)
+    assert cal.flops_per_s and cal.flops_per_s > 0
+    dm = device_model("cpu").calibrated(
+        dispatch_s=cal.dispatch_s, flops_per_s=cal.flops_per_s
+    )
+    assert dm.launch_latency_s == pytest.approx(100e-6)
+    assert dm.peak_flops == pytest.approx(cal.flops_per_s)
+
+
+# -------------------------------------------------- end-to-end (plan=auto) --
+
+
+def test_plan_auto_single_device_parity_all_pins():
+    """plan="auto" through the public collective API, every
+    (backend x topology) pin combination, against the serial oracle —
+    the fast-lane slice of the acceptance parity suite."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import make_mesh, shard_map
+    from repro.core import refinement_rounds
+    from repro.core.distributed import procrustes_average_collective
+
+    d, r = 96, 4
+    vs = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(3), (1, d, r)))[0]
+    ser = refinement_rounds(vs, n_iter=2)
+    mesh = make_mesh((1,), ("data",))
+    for topo in [None] + list(TOPOLOGIES):
+        for backend in [None] + BACKENDS:
+            fn = jax.jit(shard_map(
+                lambda v, b=backend, t=topo: procrustes_average_collective(
+                    v[0], axis_name="data", n_iter=2, backend=b, topology=t,
+                    plan="auto",
+                )[None],
+                mesh=mesh, in_specs=P("data", None, None),
+                out_specs=P("data", None, None), check_vma=False,
+            ))
+            got = fn(vs)[0]
+            assert subspace_dist64(ser, got) <= 1e-5, (topo, backend)
+
+
+def test_iterative_refinement_plan_auto_matches_legacy():
+    vs = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(0), (4, 64, 4)))[0]
+    from repro.core import iterative_refinement
+
+    a = iterative_refinement(vs, 2)
+    b = iterative_refinement(vs, 2, plan="auto")
+    assert subspace_dist64(a, b) <= 1e-5
+
+
+@pytest.mark.slow
+def test_plan_auto_parity_cube_eight_devices():
+    """Acceptance: plan="auto" exercised end-to-end across every
+    (backend x topology) pin at m=8, n_iter=2 — every planned cell
+    agrees with the serial oracle to <= 1e-5 f64 subspace distance."""
+    out = run_with_devices(
+        """
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
+        from repro.core import refinement_rounds
+        from repro.core.distributed import procrustes_average_collective
+        from repro.core.metrics import subspace_dist64
+
+        m, d, r = 8, 96, 4
+        vs = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(0), (m, d, r)))[0]
+        ser = refinement_rounds(vs, n_iter=2)
+        mesh = make_mesh((m,), ("data",))
+        for topo in (None, "psum", "gather", "ring"):
+            for backend in (None, "xla", "pallas"):
+                fn = jax.jit(shard_map(
+                    lambda v, b=backend, t=topo: procrustes_average_collective(
+                        v[0], axis_name="data", n_iter=2, backend=b,
+                        topology=t, plan="auto")[None],
+                    mesh=mesh, in_specs=P("data", None, None),
+                    out_specs=P("data", None, None), check_vma=False,
+                ))
+                got = fn(vs)[0]
+                print("CELL", topo, backend, float(subspace_dist64(ser, got)))
+        """
+    )
+    cells = [ln.split() for ln in out.strip().splitlines()
+             if ln.startswith("CELL")]
+    assert len(cells) == 12
+    for _, topo, backend, dist in cells:
+        assert float(dist) <= 1e-5, (topo, backend, dist)
+
+
+def test_eigen_run_plan_auto_records_resolved_plan(capsys):
+    from repro.launch.eigen import run
+
+    _, stats = run(d=96, r=4, n_per_shard=128, n_iter=2, solver="eigh",
+                   plan="auto", explain=True)
+    table = capsys.readouterr().out
+    assert "chosen:" in table
+    assert stats["plan_source"] == "planner"
+    expect = comm_cost(
+        stats["topology"], m=stats["m"], d=96, r=4, n_iter=2
+    ).words
+    assert stats["predicted_words"] == expect
+    assert f"words={expect}" in table
+
+
+# ------------------------------------------------------- CLI --explain --
+
+
+CHOSEN_RE = re.compile(
+    r"chosen: (\w+)/(\w[\w-]*)/([\w-]+)/([\w-]+) ring_chunk=(\d+) words=(\d+)"
+)
+
+
+@pytest.mark.slow
+def test_launch_eigen_explain_words_match_model():
+    """Acceptance: `launch.eigen --explain` prints a scored plan table
+    whose chosen-cell predicted words equal comm_cost byte for byte."""
+    out = run_with_devices(
+        """
+        import sys
+        sys.argv = ["eigen", "--d", "96", "--r", "4", "--n-per-shard", "64",
+                    "--n-iter", "2", "--solver", "eigh",
+                    "--plan", "auto", "--explain"]
+        from repro.launch.eigen import main
+        main()
+        """
+    )
+    m = CHOSEN_RE.search(out)
+    assert m, out
+    _, topo, _, _, _, words = m.groups()
+    assert int(words) == comm_cost(topo, m=8, d=96, r=4, n_iter=2).words
+    # The stats echo the same resolved plan.
+    assert f"predicted_words: {words}" in out
+
+
+@pytest.mark.slow
+def test_dryrun_paper_pca_explain_words_match_model(tmp_path):
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--paper-pca",
+         "--single-pod", "--plan", "auto", "--explain",
+         "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    m = CHOSEN_RE.search(proc.stdout)
+    assert m, proc.stdout
+    _, topo, _, _, _, words = m.groups()
+    from repro.configs.paper_pca import CONFIG as pcfg
+
+    # Reduced single-pod mesh is (2, n//2): the data axis has 2 shards.
+    expect = comm_cost(topo, m=2, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter).words
+    assert int(words) == expect
+    rec = json.load(open(os.path.join(
+        str(tmp_path), "paper-pca__pca__singlepod.json")))
+    assert rec["plan_source"] == "planner"
+    assert rec["predicted_collective_words"] == expect
+    assert rec["topology"] == topo
