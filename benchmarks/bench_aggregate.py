@@ -27,6 +27,10 @@ Record layout axes:
       ("psum" | "gather" | "ring", the ``repro.comm`` registry; "-" on
       stacked cells, which do no communication).  Since PR 4 this is an
       explicit switch, independent of ``backend``.
+  * ``bits`` — the *wire precision* of a collective cell's payloads
+      (32 | 16 | 8, the ``repro.comm.quantize`` codec registry; stacked
+      cells do no communication and always record 32).  Since PR 6 this
+      is the fifth explicit switch.
 
 Timing discipline: jit + one warm-up call (compile time recorded
 separately), then ``reps`` timed calls each ending in
@@ -40,7 +44,7 @@ Run:  PYTHONPATH=src python -m benchmarks.bench_aggregate \
           [--tiny] [--out BENCH_aggregate.json] [--reps 5] [--n-iter 2]
           [--backends xla,pallas] [--polars svd,newton-schulz]
           [--orths qr,cholesky-qr2] [--comms psum,gather,ring]
-          [--shapes 8x1024x16,16x2048x32]
+          [--bits 32,8] [--shapes 8x1024x16,16x2048x32]
 """
 
 from __future__ import annotations
@@ -54,19 +58,24 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
-SCHEMA = "bench_aggregate/v3"
+SCHEMA = "bench_aggregate/v4"
 # v1 predates the ``orth=`` switch (upgraded with orth="qr"); v2 predates
 # the ``comm`` communication-topology axis (upgraded with the historical
-# backend pairing).  ``load`` upgrades both.
+# backend pairing); v3 predates the ``bits`` wire-precision axis
+# (upgraded with bits=32 — every pre-v4 cell ran full-precision wires).
+# ``load`` upgrades all three.
 SCHEMA_V1 = "bench_aggregate/v1"
 SCHEMA_V2 = "bench_aggregate/v2"
+SCHEMA_V3 = "bench_aggregate/v3"
 
 # Record keys that identify a configuration (the diff/check join key).
 KEY_FIELDS = (
-    "topology", "comm", "backend", "polar", "orth", "m", "d", "r", "n_iter"
+    "topology", "comm", "bits", "backend", "polar", "orth", "m", "d", "r",
+    "n_iter"
 )
 
 DEFAULT_COMMS = ("psum", "gather", "ring")
+DEFAULT_BITS = (32, 8)
 
 DEFAULT_SHAPES = ((8, 1024, 16), (16, 2048, 32), (8, 4096, 64))
 TINY_SHAPES = ((4, 128, 4), (2, 96, 8))
@@ -135,7 +144,7 @@ def bench_stacked(shapes, backends, polars, orths, *, n_iter: int, reps: int):
                         )
                     )
                     rec = {
-                        "topology": "stacked", "comm": "-",
+                        "topology": "stacked", "comm": "-", "bits": 32,
                         "backend": backend,
                         "polar": polar, "orth": orth,
                         "m": m, "d": d, "r": r, "n_iter": n_iter,
@@ -152,10 +161,12 @@ def bench_stacked(shapes, backends, polars, orths, *, n_iter: int, reps: int):
 
 
 def bench_collective(
-    shapes, backends, polars, orths, comms, *, n_iter: int, reps: int
+    shapes, backends, polars, orths, comms, bits=DEFAULT_BITS,
+    *, n_iter: int, reps: int
 ):
     """The shard_map setting over the host devices (m := device count),
-    per registered communication topology (``repro.comm``)."""
+    per registered communication topology (``repro.comm``) and wire
+    precision (``repro.comm.quantize``)."""
     from repro.compat import make_mesh, shard_map
     from repro.core.distributed import procrustes_average_collective
     from jax.sharding import PartitionSpec as P
@@ -184,49 +195,54 @@ def bench_collective(
                         else backends
                     )
                     for backend in cell_backends:
+                        for cb in bits:
 
-                        def shard_fn(v, b=backend, p=polar, o=orth, t=comm):
-                            out = procrustes_average_collective(
-                                v[0], axis_name="data", n_iter=n_iter,
-                                backend=b, polar=p, orth=o, topology=t,
-                            )
-                            return out[None]
+                            def shard_fn(v, b=backend, p=polar, o=orth,
+                                         t=comm, w=cb):
+                                out = procrustes_average_collective(
+                                    v[0], axis_name="data", n_iter=n_iter,
+                                    backend=b, polar=p, orth=o, topology=t,
+                                    comm_bits=w,
+                                )
+                                return out[None]
 
-                        fn = jax.jit(
-                            shard_map(
-                                shard_fn, mesh=mesh,
-                                in_specs=P("data", None, None),
-                                out_specs=P("data", None, None),
-                                check_vma=False,
+                            fn = jax.jit(
+                                shard_map(
+                                    shard_fn, mesh=mesh,
+                                    in_specs=P("data", None, None),
+                                    out_specs=P("data", None, None),
+                                    check_vma=False,
+                                )
                             )
-                        )
-                        rec = {
-                            "topology": "collective", "comm": comm,
-                            "backend": backend,
-                            "polar": polar, "orth": orth, "m": n_dev,
-                            "d": d, "r": r,
-                            "n_iter": n_iter, "mode": _mode(backend, comm),
-                        }
-                        rec.update(_time_fn(fn, vs, reps))
-                        records.append(rec)
-                        print(
-                            f"collective/{comm} m={n_dev} d={d} r={r} "
-                            f"{backend}/{polar}/{orth} "
-                            f"[{rec['mode']}]: {rec['wall_us']:.1f}us"
-                        )
+                            rec = {
+                                "topology": "collective", "comm": comm,
+                                "bits": cb, "backend": backend,
+                                "polar": polar, "orth": orth, "m": n_dev,
+                                "d": d, "r": r,
+                                "n_iter": n_iter,
+                                "mode": _mode(backend, comm),
+                            }
+                            rec.update(_time_fn(fn, vs, reps))
+                            records.append(rec)
+                            print(
+                                f"collective/{comm} m={n_dev} d={d} r={r} "
+                                f"{backend}/{polar}/{orth}/b{cb} "
+                                f"[{rec['mode']}]: {rec['wall_us']:.1f}us"
+                            )
     return records
 
 
 def run_sweep(
     *, shapes=DEFAULT_SHAPES, backends=("xla", "pallas"),
     polars=("svd", "newton-schulz"), orths=("qr", "cholesky-qr2"),
-    comms=DEFAULT_COMMS, n_iter: int = 2, reps: int = 5,
+    comms=DEFAULT_COMMS, bits=DEFAULT_BITS, n_iter: int = 2, reps: int = 5,
 ) -> dict:
     records = bench_stacked(
         shapes, backends, polars, orths, n_iter=n_iter, reps=reps
     )
     records += bench_collective(
-        shapes, backends, polars, orths, comms, n_iter=n_iter, reps=reps
+        shapes, backends, polars, orths, comms, bits, n_iter=n_iter,
+        reps=reps
     )
     return {
         "schema": SCHEMA,
@@ -263,6 +279,12 @@ def load(path: str) -> dict:
                     else ("gather" if rec.get("backend") == "pallas"
                           else "psum")
                 )
+        doc["schema"] = SCHEMA_V3
+    if doc.get("schema") == SCHEMA_V3:
+        # v3 predates the ``bits`` wire-precision axis: every pre-v4 cell
+        # ran full-precision fp32 wires.
+        for rec in doc.get("records", []):
+            rec.setdefault("bits", 32)
         doc["schema"] = SCHEMA
     if doc.get("schema") != SCHEMA:
         raise ValueError(
@@ -281,13 +303,13 @@ def pretty_print(doc: dict) -> None:
         f"# {SCHEMA} | jax {meta.get('jax')} on {meta.get('platform')} "
         f"x{meta.get('device_count')} | {meta.get('timestamp')}"
     )
-    hdr = ("topology", "comm", "backend", "polar", "orth", "m", "d", "r",
-           "n_iter", "mode", "wall_us", "compile_s")
+    hdr = ("topology", "comm", "bits", "backend", "polar", "orth", "m", "d",
+           "r", "n_iter", "mode", "wall_us", "compile_s")
     print(",".join(hdr))
     for rec in sorted(doc["records"], key=_key):
         print(
-            f"{rec['topology']},{rec['comm']},{rec['backend']},"
-            f"{rec['polar']},{rec['orth']},"
+            f"{rec['topology']},{rec['comm']},{rec['bits']},"
+            f"{rec['backend']},{rec['polar']},{rec['orth']},"
             f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
             f"{rec['mode']},{rec['wall_us']:.1f},{rec['compile_s']:.2f}"
         )
@@ -307,7 +329,8 @@ def diff(old: dict, new: dict) -> None:
             f"({p_old!r} vs {p_new!r}); wall times are not comparable"
         )
     olds = {_key(r): r for r in old["records"]}
-    print("topology,comm,backend,polar,orth,m,d,r,n_iter,old_us,new_us,ratio")
+    print("topology,comm,bits,backend,polar,orth,m,d,r,n_iter,"
+          "old_us,new_us,ratio")
     for rec in sorted(new["records"], key=_key):
         prev = olds.get(_key(rec))
         if prev is None:
@@ -318,8 +341,8 @@ def diff(old: dict, new: dict) -> None:
             status = f"{rec['wall_us'] / max(prev['wall_us'], 1e-9):.3f}"
         old_us = f"{prev['wall_us']:.1f}" if prev else "-"
         print(
-            f"{rec['topology']},{rec['comm']},{rec['backend']},"
-            f"{rec['polar']},{rec['orth']},"
+            f"{rec['topology']},{rec['comm']},{rec['bits']},"
+            f"{rec['backend']},{rec['polar']},{rec['orth']},"
             f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
             f"{old_us},{rec['wall_us']:.1f},{status}"
         )
@@ -355,12 +378,17 @@ def check(
       the same factor is invisible — run ``calibrate=False`` on
       same-machine sweeps to see it.
     * **group verdicts.**  The primary verdict is per *path group*
-      (topology, comm, backend) — the unit a code change actually moves —
-      using the median calibrated ratio of the group's cells (polar /
-      orth / shape variants).  A noisy-neighbor episode hits a few
-      arbitrary cells; a real path regression moves its whole group.
-      The sweeps interleave groups (backend/comm innermost) so one noise
-      episode cannot hit all of a group's cells back to back.
+      (topology, comm, bits) — the unit a code change actually moves —
+      using the median calibrated ratio of the group's cells (backend /
+      polar / orth / shape variants).  A noisy-neighbor episode hits a
+      few arbitrary cells; a real path regression moves its whole group.
+      Backend variants fold into one group since v4: a wire-tier
+      regression (a codec suddenly costing an extra pass) shows up on
+      every backend of its (comm, bits) cell alike, and folding keeps
+      group populations large enough for a meaningful median on the
+      tiny CI sweep.  The sweeps interleave groups (bits/backend/comm
+      innermost) so one noise episode cannot hit all of a group's cells
+      back to back.
     * **cell blowups.**  Narrow single-cell regressions are still caught,
       at a loose ``cell_threshold`` (default 5x) and only for cells at or
       above ``cell_floor_us`` in both sweeps — sub-millisecond cells
@@ -396,7 +424,7 @@ def check(
     }
     groups: dict = {}
     for rec, prev, ratio in matched:
-        g = (rec["topology"], rec["comm"], rec["backend"])
+        g = (rec["topology"], rec["comm"], rec.get("bits", 32))
         groups.setdefault(g, []).append(ratio / norms[rec["topology"]])
     regressions = [
         {"group": g, "cal_ratio": statistics.median(rs), "cells": len(rs)}
@@ -427,6 +455,10 @@ def main() -> None:
     ap.add_argument("--comms", default=",".join(DEFAULT_COMMS),
                     help="communication topologies for the collective "
                          "cells (repro.comm registry)")
+    ap.add_argument("--bits", default=",".join(str(b) for b in DEFAULT_BITS),
+                    help="comm_bits wire tiers for the collective cells "
+                         "(repro.comm.quantize; stacked cells always "
+                         "record 32)")
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--n-iter", type=int, default=2)
     args = ap.parse_args()
@@ -441,6 +473,7 @@ def main() -> None:
         polars=tuple(args.polars.split(",")),
         orths=tuple(args.orths.split(",")),
         comms=tuple(args.comms.split(",")),
+        bits=tuple(int(b) for b in args.bits.split(",")),
         n_iter=args.n_iter,
         reps=args.reps,
     )

@@ -1,0 +1,273 @@
+"""Wire-precision codecs for the aggregation collectives (``comm_bits=``).
+
+The paper's one-round scheme already wins on *words*: every machine ships one
+(d, r) basis instead of a (d, d) covariance.  This module makes the words
+cheaper.  Each collective payload — the reference broadcast, the psum of
+aligned bases, the gathered stack, the ring's circulating chunks — can be
+sent at a reduced wire precision:
+
+==========  ==========  =====================================================
+comm_bits   wire dtype  codec
+==========  ==========  =====================================================
+32          f32         identity (``encode``/``decode`` return the input
+                        unchanged — the traced 32-bit path adds **zero** ops)
+16          bf16        round-to-nearest-even cast (deterministic)
+8           s8          per-column scale (f32[r]) + **stochastic rounding**,
+                        seeded via ``jax.random`` so the rounding is unbiased:
+                        E[decode(encode(x))] == x
+==========  ==========  =====================================================
+
+Error feedback (PowerSGD-style, as in ``optim/eigen_compress.py``): lossy
+codecs return the residual ``x - decode(encode(x))`` alongside the payload,
+and the callers (psum rounds, ring rounds) add it back into the *next*
+round's send.  The decoded payloads then telescope — over k rounds the sum of
+what was actually transmitted equals the sum of what should have been sent,
+up to the single final residual — so quantization noise does not accumulate
+with the round count.
+
+Overflow headroom for the int8 **psum** path: the s8 payloads are summed on
+the wire, so the shared per-column scale (one f32[r] max-all-reduce) leaves
+room for the sum: ``qscale = colmax * m / (127 - m)`` guarantees
+``|sum_i q_i| <= (127 - m) + m = 127`` even under stochastic rounding.  This
+needs ``m <= 126``; ``wire_psum_mean`` raises beyond that and the planner
+marks the (psum, 8) cell infeasible.
+
+Keys: collectives derive per-shard streams with
+``fold_in(PRNGKey(salt), axis_index)`` (``fold_in`` accepts a traced int32
+under shard_map), then fold in the round index.  Deterministic for a given
+mesh, independent across shards and rounds.
+
+Parity-vs-bits (empirical, on noisy-copies-of-a-common-subspace stacks — the
+paper's setting; see ``tests/test_backend_invariance.py``): subspace distance
+to the serial fp32 oracle is bounded by ``PARITY_TOL[bits]`` below.  At 32
+bits the wire is exact, so the existing 1e-5 cube tolerance holds; at 16/8
+the bound is set by the quantization step ~``colmax * 2^-(bits-1)`` per
+element, averaged down by sqrt(m) (independent stochastic noise) and damped
+across rounds by error feedback.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "COMM_BITS",
+    "COMM_BITS_CHOICES",
+    "PARITY_TOL",
+    "Codec",
+    "get_codec",
+    "resolve_comm_bits",
+    "message_bits",
+    "shard_key",
+    "to_wire",
+    "from_wire",
+    "wire_broadcast",
+    "wire_psum_mean",
+]
+
+# Registry order doubles as the planner's tie-break: full precision first, so
+# a cell only quantizes when the model says the wire actually gets cheaper.
+COMM_BITS = (32, 16, 8)
+
+# CLI / knob spellings: a concrete tier or "auto" (planner chooses).
+COMM_BITS_CHOICES = ("32", "16", "8", "auto")
+
+# Documented parity tolerances (f64 subspace distance vs the serial fp32
+# oracle) for the bit-keyed parity cube.  32 inherits the exact-wire cube
+# tolerance; 16/8 are calibrated on the noisy-copy stacks with error
+# feedback on (see module docstring).
+PARITY_TOL = {32: 1e-5, 16: 2e-2, 8: 2.5e-1}
+
+_INT8_QMAX = 127.0
+
+
+def resolve_comm_bits(comm_bits) -> int:
+    """Normalize a ``comm_bits`` knob value to a concrete tier.
+
+    Accepts ``None`` (-> 32, the exact wire), an int, or a digit string.
+    ``"auto"`` is *not* resolved here — it is a planner-level request and
+    must be consumed by ``resolve_plan`` before reaching the codecs.
+    """
+    if comm_bits is None:
+        return 32
+    if isinstance(comm_bits, str):
+        if comm_bits == "auto":
+            raise ValueError(
+                "comm_bits='auto' must be resolved by the planner "
+                "(resolve_plan / plan_aggregation), not by the codec layer"
+            )
+        if not comm_bits.isdigit():
+            raise ValueError(
+                f"unknown comm_bits {comm_bits!r}; choose from "
+                f"{COMM_BITS} or 'auto'"
+            )
+        comm_bits = int(comm_bits)
+    if comm_bits not in COMM_BITS:
+        raise ValueError(
+            f"unknown comm_bits {comm_bits!r}; choose from {COMM_BITS}"
+        )
+    return int(comm_bits)
+
+
+def message_bits(d: int, r: int, comm_bits=32) -> int:
+    """Wire bits for one (d, r) basis message at a given tier.
+
+    int8 messages carry their f32[r] per-column scale alongside the payload
+    (as a second small collective), so the model charges ``8*d*r + 32*r``
+    bits — exactly what the compiled HLO moves.  Pure arithmetic: safe to
+    import from the cost model without dragging in jax.
+    """
+    bits = resolve_comm_bits(comm_bits)
+    overhead = 32 * r if bits == 8 else 0
+    return d * r * bits + overhead
+
+
+def shard_key(axis_name: str, salt: int):
+    """Per-shard PRNG key inside a collective: fold the (traced) shard index
+    into a salted base key.  Callers fold in round indices on top."""
+    base = jax.random.PRNGKey(salt)
+    return jax.random.fold_in(base, jax.lax.axis_index(axis_name))
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """One wire-precision tier.
+
+    ``encode`` maps an f32 array to ``(data, scale)`` where ``data`` is in
+    ``wire_dtype`` and ``scale`` is an f32[r] per-column scale (``None`` for
+    the scale-free tiers).  ``decode`` inverts to f32.  ``stochastic`` tiers
+    require a PRNG key at encode time.
+    """
+
+    bits: int
+
+    @property
+    def wire_dtype(self):
+        return {32: jnp.float32, 16: jnp.bfloat16, 8: jnp.int8}[self.bits]
+
+    @property
+    def stochastic(self) -> bool:
+        return self.bits == 8
+
+    @property
+    def lossy(self) -> bool:
+        return self.bits != 32
+
+    def encode(self, x, key=None) -> Tuple[jax.Array, Optional[jax.Array]]:
+        if self.bits == 32:
+            return x, None
+        if self.bits == 16:
+            return x.astype(jnp.bfloat16), None
+        if key is None:
+            raise ValueError(
+                "the int8 codec uses stochastic rounding and needs a PRNG key"
+            )
+        x = x.astype(jnp.float32)
+        colmax = jnp.max(jnp.abs(x), axis=0)
+        scale = jnp.where(colmax > 0, colmax, 1.0) / _INT8_QMAX
+        u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+        q = jnp.floor(x / scale + u)
+        q = jnp.clip(q, -_INT8_QMAX, _INT8_QMAX).astype(jnp.int8)
+        return q, scale
+
+    def decode(self, data, scale=None):
+        if self.bits == 32:
+            return data
+        if self.bits == 16:
+            return data.astype(jnp.float32)
+        return data.astype(jnp.float32) * scale
+
+    def residual(self, x, data, scale=None):
+        """Error-feedback state: what encoding dropped (zeros at 32 bits)."""
+        return x - self.decode(data, scale)
+
+
+_CODECS = {b: Codec(b) for b in COMM_BITS}
+
+
+def get_codec(comm_bits) -> Codec:
+    return _CODECS[resolve_comm_bits(comm_bits)]
+
+
+def to_wire(data):
+    """Bitcast a bf16 payload to u16 for data-movement collectives.
+
+    XLA's CPU float-normalization pass rewrites bf16 HLO as
+    convert-to-f32 — including pure movement collectives — which would
+    silently quadruple the measured wire.  ppermute / all-gather / the
+    masked one-hot psum of a broadcast move bytes, not arithmetic, so a
+    u16 carrier is semantically identical and keeps the wire at 2
+    bytes/element on every backend.  s8 and f32 pass through.
+    """
+    if data.dtype == jnp.bfloat16:
+        return jax.lax.bitcast_convert_type(data, jnp.uint16)
+    return data
+
+
+def from_wire(data, codec: "Codec"):
+    """Undo ``to_wire`` on arrival (u16 carrier back to bf16)."""
+    if codec.bits == 16 and data.dtype == jnp.uint16:
+        return jax.lax.bitcast_convert_type(data, jnp.bfloat16)
+    return data
+
+
+def wire_broadcast(x, axis_name: str, codec: Codec, *, src: int = 0,
+                   key=None):
+    """Broadcast shard ``src``'s basis at wire precision.
+
+    Implemented as a masked psum of the encoded payload: only one shard
+    contributes a nonzero term, so the integer sum is exact (u16 carrier
+    for bf16, s8 for int8 — no overflow, no headroom scale).  At 32 bits
+    this is exactly ``topology.broadcast_from`` (no extra ops).
+    """
+    from repro.comm.topology import broadcast_from
+
+    if not codec.lossy:
+        return broadcast_from(x, axis_name, src=src)
+    idx = jax.lax.axis_index(axis_name)
+    data, scale = codec.encode(x.astype(jnp.float32), key=key)
+    data = to_wire(data)
+    zero = jnp.zeros((), data.dtype)
+    masked = jnp.where(idx == src, data, zero)
+    out = from_wire(jax.lax.psum(masked, axis_name), codec)
+    if scale is None:
+        return codec.decode(out)
+    scale = jax.lax.psum(jnp.where(idx == src, scale, 0.0), axis_name)
+    return codec.decode(out, scale)
+
+
+def wire_psum_mean(x, axis_name: str, m: int, codec: Codec, *, key=None):
+    """Mean over the axis with the *sum taken at wire precision*.
+
+    Returns ``(mean, residual)`` where ``residual`` is this shard's
+    error-feedback state (``None`` at 32 bits).  The int8 tier agrees on a
+    shared per-column scale via one f32[r] max-all-reduce, with headroom so
+    the summed s8 payloads cannot wrap (see module docstring); it needs
+    ``m <= 126``.  The bf16 tier genuinely sums in bf16 — arithmetic, so
+    no u16 carrier trick applies; XLA's CPU backend float-normalizes it to
+    an f32 all-reduce (TPU sums bf16 natively), which is why the
+    bits-vs-HLO byte check exempts the (psum, 16) cell off-TPU.
+    """
+    if not codec.lossy:
+        return jax.lax.psum(x, axis_name) / m, None
+    x = x.astype(jnp.float32)
+    if codec.bits == 16:
+        w = x.astype(jnp.bfloat16)
+        mean = jax.lax.psum(w, axis_name).astype(jnp.float32) / m
+        return mean, x - w.astype(jnp.float32)
+    if m > 126:
+        raise ValueError(
+            f"int8 psum needs m <= 126 for overflow headroom (got m={m}); "
+            "use topology='gather'/'ring' or comm_bits >= 16"
+        )
+    colmax = jax.lax.pmax(jnp.max(jnp.abs(x), axis=0), axis_name)
+    qscale = jnp.where(colmax > 0, colmax, 1.0) * m / (_INT8_QMAX - m)
+    u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+    q = jnp.floor(x / qscale + u)
+    q = jnp.clip(q, -_INT8_QMAX, _INT8_QMAX).astype(jnp.int8)
+    total = jax.lax.psum(q, axis_name).astype(jnp.float32) * qscale
+    return total / m, x - q.astype(jnp.float32) * qscale

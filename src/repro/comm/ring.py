@@ -53,7 +53,18 @@ from typing import List, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm.quantize import (
+    from_wire,
+    get_codec,
+    shard_key,
+    to_wire,
+    wire_broadcast,
+)
+
 __all__ = ["DEFAULT_RING_CHUNK", "ring_rounds"]
+
+# Salt for the ring's per-shard stochastic-rounding streams ("RING").
+_RING_SALT = 0x52494E47
 
 # Rows per circulating chunk — the overlap granularity.  Matches the
 # Pallas kernels' default d-block (bk=2048): ~2048*r*4 bytes per transfer
@@ -99,33 +110,53 @@ def ring_rounds(
     polar: str = "svd",
     orth: str = "qr",
     chunk: int = DEFAULT_RING_CHUNK,
+    comm_bits: int = 32,
 ) -> jax.Array:
     """``n_iter`` Algorithm-1 rounds over a mesh axis via the ring schedule.
 
     Args:
       v_local: (d, r) local basis on each shard of ``axis_name``.
       ref: optional (d, r) reference; defaults to shard 0's basis via one
-        d·r broadcast (the paper's choice).
-      n_iter: refinement rounds; each costs (m-1)·d·r ring-hop words.
+        wire-precision broadcast (the paper's choice).
+      n_iter: refinement rounds; each costs (m-1) hop messages of
+        ``quantize.message_bits(d, r, comm_bits)`` bits.
       polar / orth: round methods, as everywhere (validated up front).
       chunk: rows per circulating chunk; need not divide d.
+      comm_bits: wire precision of the circulating chunks (32/16/8, see
+        ``repro.comm.quantize``).  Lossy tiers quantize *once* per round
+        and circulate the wire payload verbatim — receivers decode for
+        compute but forward the original chunks, so hop count adds no
+        re-quantization error — with the per-round encoding residual
+        carried as error-feedback state into the next round's send.
 
     Returns the (d, r) round output in ``v_local.dtype`` (replicated up to
-    the summation-order rounding discussed in the module docstring).
+    the summation-order rounding discussed in the module docstring; lossy
+    tiers are replicated exactly as far, since every shard decodes the
+    same m payloads).
     """
-    from repro.comm.topology import axis_size, broadcast_from
+    from repro.comm.topology import axis_size
     from repro.core.orthonorm import orthonormalize, resolve_orth
     from repro.core.procrustes import resolve_polar
 
     resolve_polar(polar)
     resolve_orth(orth)
+    codec = get_codec(comm_bits)
     m = axis_size(axis_name)
+    base_key = shard_key(axis_name, _RING_SALT) if codec.stochastic else None
     if ref is None:
-        ref = broadcast_from(v_local, axis_name, src=0)
+        bkey = (
+            jax.random.fold_in(base_key, 0) if codec.stochastic else None
+        )
+        ref = wire_broadcast(v_local, axis_name, codec, src=0, key=bkey)
     out = ref
-    for _ in range(max(n_iter, 1)):
-        vbar = _ring_round(
-            v_local, out, axis_name=axis_name, m=m, polar=polar, chunk=chunk
+    err = jnp.zeros(v_local.shape, jnp.float32) if codec.lossy else None
+    for k in range(max(n_iter, 1)):
+        rkey = (
+            jax.random.fold_in(base_key, k + 1) if codec.stochastic else None
+        )
+        vbar, err = _ring_round(
+            v_local, out, axis_name=axis_name, m=m, polar=polar, chunk=chunk,
+            codec=codec, err=err, key=rkey,
         )
         out = orthonormalize(vbar, orth=orth).astype(v_local.dtype)
     return out
@@ -139,21 +170,49 @@ def _ring_round(
     m: int,
     polar: str,
     chunk: int,
-) -> jax.Array:
-    """One round: circulate the bases m-1 hops, aligning each arrival."""
+    codec,
+    err,
+    key,
+):
+    """One round: circulate the bases m-1 hops, aligning each arrival.
+
+    Returns ``(vbar, err)`` — the pre-orthonormalization average and the
+    updated error-feedback residual (``None`` at 32 bits).  The circulating
+    chunk scratch is held in the codec's **wire dtype** (s8 / bf16 / f32):
+    a bf16 hop forwards bf16, never a silently-upcast f32 copy, and the
+    int8 tier ppermutes its f32[r] column scale alongside the payload as
+    one extra small transfer per hop (the 32·r term in the cost model).
+    """
     d = v_local.shape[0]
     spans = _chunk_spans(d, chunk)
     ref_c = [ref[s:e].astype(jnp.float32) for s, e in spans]
-    buf_c = [v_local[s:e].astype(jnp.float32) for s, e in spans]
     perm = [(i, (i + 1) % m) for i in range(m)]
 
-    acc_c = _aligned_contribution(buf_c, ref_c, polar=polar)  # own basis
+    if codec.lossy:
+        send = v_local.astype(jnp.float32) + err
+        data, scale = codec.encode(send, key=key)
+        err = codec.residual(send, data, scale)
+        buf_c = [to_wire(data[s:e]) for s, e in spans]
+    else:
+        scale = None
+        buf_c = [v_local[s:e].astype(jnp.float32) for s, e in spans]
+
+    def dec(chunks, sc):
+        if not codec.lossy:
+            return chunks
+        return [codec.decode(from_wire(c, codec), sc) for c in chunks]
+
+    # Own basis: consume the *decoded* payload, so all m shards average the
+    # identical m wire-precision bases (replication is preserved).
+    acc_c = _aligned_contribution(dec(buf_c, scale), ref_c, polar=polar)
     for _ in range(m - 1):
         # Receive the left neighbor's basis chunk by chunk; the Gram of
         # chunk c can start as soon as chunk c lands, overlapping the
         # remaining transfers (and the next hop overlaps this hop's apply).
         buf_c = [jax.lax.ppermute(c, axis_name, perm) for c in buf_c]
-        contrib = _aligned_contribution(buf_c, ref_c, polar=polar)
+        if scale is not None:
+            scale = jax.lax.ppermute(scale, axis_name, perm)
+        contrib = _aligned_contribution(dec(buf_c, scale), ref_c, polar=polar)
         acc_c = [a + c for a, c in zip(acc_c, contrib)]
     vbar = acc_c[0] if len(acc_c) == 1 else jnp.concatenate(acc_c, axis=0)
-    return vbar / m
+    return vbar / m, err

@@ -30,16 +30,24 @@ Cost-model conventions (shared by ``benchmarks/bench_comm.py``, the
 bench-smoke CI check, and ``repro.launch.dryrun`` — do not re-derive these
 inline):
 
-  * ``CommCost.words`` counts *logical collective payload words per
+  * ``CommCost.bits`` is the primary quantity: *wire bits per estimation*
+    at the requested ``comm_bits=`` tier.  One (d, r) basis message costs
+    ``quantize.message_bits(d, r, comm_bits)`` — ``d·r·comm_bits`` payload
+    plus the f32[r] per-column scale (32·r bits) that rides with every
+    int8 message.
+  * ``CommCost.words`` keeps the *logical collective payload words per
     estimation*: an all-reduce or broadcast of a (d, r) basis counts d·r,
     a gather of m bases counts m·d·r, and each ring hop counts d·r.  This
-    is the paper's own accounting (Section 2.1 / Remark 2) and what the
-    comm table prints.
-  * ``CommCost.hlo_words`` breaks the same schedule down by HLO collective
-    kind in *operand words per device* — exactly what
-    ``repro.launch.hlo_analysis.collective_bytes`` measures on the
-    partitioned module (multiply by 4 for f32 bytes).  The measured check
-    in ``bench_comm.comm_measured`` asserts compiled HLO against this.
+    is the paper's own accounting (Section 2.1 / Remark 2), independent of
+    wire precision, and what the comm table prints; at ``comm_bits=32``
+    the compatibility identity ``bits == words * 32`` holds exactly.
+  * ``CommCost.hlo_bits`` breaks the same schedule down by HLO collective
+    kind in *operand bits per device* — ``hlo_bytes`` (bits // 8) is
+    exactly what ``repro.launch.hlo_analysis.collective_bytes`` measures
+    on the partitioned module.  The measured check in
+    ``bench_comm.comm_measured`` asserts compiled HLO against this.
+    ``hlo_words`` (bits // 32) survives as the legacy f32 view, exact
+    only at 32 bits.
 """
 
 from __future__ import annotations
@@ -51,6 +59,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import axis_size as _compat_axis_size
+from repro.comm.quantize import message_bits, resolve_comm_bits
 
 __all__ = [
     "TOPOLOGIES",
@@ -123,14 +132,30 @@ def broadcast_from(x: jax.Array, axis_name: str, src: int = 0) -> jax.Array:
 class CommCost:
     """Communication bill of one estimation (n_iter rounds) per topology.
 
-    ``words`` is the logical payload (module docstring conventions);
-    ``hlo_words`` the per-device HLO operand-word breakdown by collective
-    kind, matching ``hlo_analysis.collective_bytes`` keys.
+    ``bits`` is the wire total at ``comm_bits`` precision; ``words`` the
+    precision-independent logical payload (module docstring conventions);
+    ``hlo_bits`` the per-device HLO operand-bit breakdown by collective
+    kind, matching ``hlo_analysis.collective_bytes`` keys via the
+    ``hlo_bytes`` property.
     """
 
     topology: str
+    comm_bits: int
     words: int
-    hlo_words: Dict[str, int]
+    bits: int
+    hlo_bits: Dict[str, int]
+
+    @property
+    def hlo_bytes(self) -> Dict[str, int]:
+        """Per-device operand bytes by collective kind (bits // 8) —
+        directly comparable to ``hlo_analysis.collective_bytes``."""
+        return {k: v // 8 for k, v in self.hlo_bits.items()}
+
+    @property
+    def hlo_words(self) -> Dict[str, int]:
+        """Legacy f32 operand-word view (bits // 32).  Exact at
+        ``comm_bits=32``; kept for pre-bits consumers."""
+        return {k: v // 32 for k, v in self.hlo_bits.items()}
 
 
 def comm_cost(
@@ -141,29 +166,40 @@ def comm_cost(
     r: int,
     n_iter: int = 1,
     ref_broadcast: bool = True,
+    comm_bits=32,
 ) -> CommCost:
-    """Words a topology moves for ``n_iter`` refinement rounds.
+    """Bits a topology moves for ``n_iter`` refinement rounds.
 
-    ``ref_broadcast=False`` drops the initial d·r reference broadcast
+    ``ref_broadcast=False`` drops the initial reference broadcast
     (psum/ring only), the ``ref=``-supplied case of the collectives
     (e.g. the eigen-compressed optimizer aligning to last period's basis).
     The gather topology never broadcasts: the reference is a row of the
-    gathered stack.
+    gathered stack.  Every message — broadcast, psum round, gathered
+    contribution, ring hop — costs ``message_bits(d, r, comm_bits)`` on
+    the wire (the int8 tier's f32[r] scale collectives included); the
+    int8 psum rounds spend their 32·r overhead on the shared-scale
+    max-all-reduce instead of a per-message scale, same total.
     """
     t = resolve_topology(topology)
+    bits_per = resolve_comm_bits(comm_bits)
     n = max(n_iter, 1)
     basis = d * r
-    bcast = basis if ref_broadcast else 0
+    msg = message_bits(d, r, bits_per)
+    bcast_w = basis if ref_broadcast else 0
+    bcast_b = msg if ref_broadcast else 0
     if t == "psum":
-        ar = bcast + n * basis
-        return CommCost("psum", ar, {"all-reduce": ar})
+        words = bcast_w + n * basis
+        bits = bcast_b + n * msg
+        return CommCost("psum", bits_per, words, bits, {"all-reduce": bits})
     if t == "gather":
-        # Every shard contributes its d·r operand once; rounds are free.
-        return CommCost("gather", m * basis, {"all-gather": basis})
-    hops = n * (m - 1) * basis
+        # Every shard contributes its operand once; rounds are free.
+        return CommCost(
+            "gather", bits_per, m * basis, m * msg, {"all-gather": msg}
+        )
+    hop_bits = n * (m - 1) * msg
     return CommCost(
-        "ring", bcast + hops,
-        {"all-reduce": bcast, "collective-permute": hops},
+        "ring", bits_per, bcast_w + n * (m - 1) * basis, bcast_b + hop_bits,
+        {"all-reduce": bcast_b, "collective-permute": hop_bits},
     )
 
 

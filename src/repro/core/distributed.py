@@ -29,7 +29,12 @@ r x r rotation method and final orthonormalization; the
 single fused kernel launch (DESIGN.md §3.2).  Every
 (backend x topology x polar x orth) cell computes the same estimator — the
 parity suites (``tests/test_topology.py``,
-``tests/test_backend_invariance.py``) assert it.
+``tests/test_backend_invariance.py``) assert it.  A fifth orthogonal axis,
+``comm_bits=`` (32 | 16 | 8 | "auto"), sets the wire precision the chosen
+topology moves its payloads at (``repro.comm.quantize``): at 32 the
+collectives are bit-identical to before; at 16/8 the psum and ring
+schedules carry per-shard error feedback and parity holds to the
+bit-keyed tolerances in ``repro.comm.PARITY_TOL``.
 
 All collective functions here are written to be called *inside*
 ``shard_map`` with a named mesh axis; the ``distributed_pca`` driver wraps
@@ -46,9 +51,13 @@ from jax.sharding import PartitionSpec as P
 from repro.comm import (
     axis_size,
     broadcast_from,
+    get_codec,
     resolve_topology,
     ring_rounds,
+    wire_broadcast,
+    wire_psum_mean,
 )
+from repro.comm.quantize import from_wire, shard_key, to_wire
 from repro.compat import shard_map
 from repro.core import procrustes
 from repro.core.covariance import empirical_covariance
@@ -64,6 +73,11 @@ __all__ = [
     "distributed_pca",
     "distributed_pca_from_covs",
 ]
+
+# Stochastic-rounding stream salts, one per collective site ("PSUM"/"GATR"):
+# shards fold their axis index (and round counter) into these.
+_PSUM_SALT = 0x5053554D
+_GATHER_SALT = 0x47415452
 
 
 def _align_local(
@@ -88,6 +102,7 @@ def procrustes_average_collective(
     orth: str | None = None,
     topology: str | None = None,
     ring_chunk: int | None = None,
+    comm_bits=None,
     plan=None,
 ) -> jax.Array:
     """Algorithm 1 (n_iter=1) / Algorithm 2 (n_iter>1) across a mesh axis.
@@ -115,11 +130,16 @@ def procrustes_average_collective(
         comm/compute overlap granularity; need not divide d).  Default:
         the planner's d·r-vs-latency rule under ``plan="auto"``,
         ``repro.comm.DEFAULT_RING_CHUNK`` otherwise.
+      comm_bits: wire precision of the collective payloads — 32 | 16 | 8 |
+        "auto" (``repro.comm.quantize``).  Default 32 (exact wire, adds no
+        ops); lossy tiers run with per-shard error feedback under psum and
+        ring, and "auto" lets the planner trade precision against
+        bandwidth.  Orthogonal to every other knob.
       plan: ``None`` — legacy per-knob resolution, byte-identical to
         before; ``"auto"`` — the ``repro.plan`` cost model scores the
-        (backend x topology x polar x orth) cube for this (m, d, r) and
-        decides every knob left free (concrete knob arguments are pins);
-        a ``repro.plan.Plan`` — used verbatim.
+        (backend x topology x polar x orth x comm_bits) cube for this
+        (m, d, r) and decides every knob left free (concrete knob
+        arguments are pins); a ``repro.plan.Plan`` — used verbatim.
 
     Returns the replicated (d, r) Procrustes-fixed average.
     """
@@ -129,17 +149,37 @@ def procrustes_average_collective(
     pl = resolve_plan(
         plan, m=axis_size(axis_name), d=d, r=r, n_iter=n_iter,
         backend=backend, topology=topology, polar=polar, orth=orth,
-        ring_chunk=ring_chunk, ref_broadcast=(ref is None),
+        ring_chunk=ring_chunk, comm_bits=comm_bits,
+        ref_broadcast=(ref is None),
     )
     backend, topo, polar, orth = pl.backend, pl.topology, pl.polar, pl.orth
     procrustes.resolve_polar(polar)
     resolve_orth(orth)
     resolve_topology(topo, backend)
+    codec = get_codec(pl.comm_bits)
     if topo == "gather":
         # Coordinator topology, replicated on every shard: gather the m
-        # local bases once, then run the backend-dispatched stacked rounds
-        # (the loop itself lives in ``eigenspace.refinement_rounds``).
-        vs = jax.lax.all_gather(v_local, axis_name)  # (m, d, r)
+        # local bases once (at wire precision — each shard encodes its own
+        # contribution, so the gathered payload is s8/bf16 plus the int8
+        # tier's (m, r) scale gather), then run the backend-dispatched
+        # stacked rounds (the loop lives in ``eigenspace.refinement_rounds``
+        # and is communication-free, so there is no error-feedback state).
+        if codec.lossy:
+            key = (
+                shard_key(axis_name, _GATHER_SALT)
+                if codec.stochastic else None
+            )
+            data, scale = codec.encode(v_local.astype(jnp.float32), key=key)
+            g = from_wire(
+                jax.lax.all_gather(to_wire(data), axis_name), codec
+            )  # (m, d, r) wire dtype
+            if scale is None:
+                vs = codec.decode(g)
+            else:
+                gs = jax.lax.all_gather(scale, axis_name)  # (m, r)
+                vs = codec.decode(g, gs[:, None, :])
+        else:
+            vs = jax.lax.all_gather(v_local, axis_name)  # (m, d, r)
         return refinement_rounds(
             vs, ref, n_iter=n_iter, backend=backend, polar=polar, orth=orth
         )
@@ -147,13 +187,31 @@ def procrustes_average_collective(
         return ring_rounds(
             v_local, ref, axis_name=axis_name, n_iter=n_iter,
             polar=polar, orth=orth, chunk=pl.ring_chunk,
+            comm_bits=pl.comm_bits,
         )
     m = axis_size(axis_name)
+    base_key = (
+        shard_key(axis_name, _PSUM_SALT) if codec.stochastic else None
+    )
     if ref is None:
-        ref = broadcast_from(v_local, axis_name, src=0)
-    for _ in range(max(n_iter, 1)):
+        bkey = jax.random.fold_in(base_key, 0) if codec.stochastic else None
+        ref = wire_broadcast(v_local, axis_name, codec, src=0, key=bkey)
+    err = jnp.zeros(v_local.shape, jnp.float32) if codec.lossy else None
+    for k in range(max(n_iter, 1)):
         aligned = _align_local(v_local, ref, backend=backend, polar=polar)
-        vbar = jax.lax.psum(aligned.astype(v_local.dtype), axis_name) / m
+        if codec.lossy:
+            # Sum at wire precision with error feedback: what this round's
+            # encoding drops rides into the next round's send, so the
+            # decoded contributions telescope across rounds.
+            rkey = (
+                jax.random.fold_in(base_key, k + 1)
+                if codec.stochastic else None
+            )
+            send = aligned.astype(jnp.float32) + err
+            vbar, err = wire_psum_mean(send, axis_name, m, codec, key=rkey)
+            vbar = vbar.astype(v_local.dtype)
+        else:
+            vbar = jax.lax.psum(aligned.astype(v_local.dtype), axis_name) / m
         ref = orthonormalize(vbar, orth=orth)
     return ref
 
@@ -193,6 +251,7 @@ def distributed_pca(
     polar: str | None = None,
     orth: str | None = None,
     topology: str | None = None,
+    comm_bits=None,
     plan=None,
 ) -> jax.Array:
     """End-to-end one-shot distributed PCA on a mesh.
@@ -202,9 +261,10 @@ def distributed_pca(
     runs the Procrustes-fixed average.  ``backend`` selects the compute
     path — ``"pallas"`` kernels both the shard-local covariance stage and
     the aggregation (see module docstring) — ``polar`` the rotation
-    method, ``orth`` the per-round orthonormalization, and ``topology``
-    the communication schedule the aggregation runs over.
-    ``plan=None|"auto"|Plan`` resolves all four through the execution
+    method, ``orth`` the per-round orthonormalization, ``topology``
+    the communication schedule the aggregation runs over, and
+    ``comm_bits`` the wire precision of its payloads.
+    ``plan=None|"auto"|Plan`` resolves all five through the execution
     planner (``repro.plan``): the plan is resolved once here at the
     driver level — so a planned ``backend`` also routes the shard-local
     covariance stage — and passed to the collective verbatim.
@@ -215,7 +275,7 @@ def distributed_pca(
     pl = resolve_plan(
         plan, m=mesh.shape[data_axis], d=samples.shape[-1], r=r,
         n_iter=n_iter, backend=backend, topology=topology,
-        polar=polar, orth=orth,
+        polar=polar, orth=orth, comm_bits=comm_bits,
     )
 
     def shard_fn(x_shard: jax.Array) -> jax.Array:
@@ -251,21 +311,22 @@ def distributed_pca_from_covs(
     polar: str | None = None,
     orth: str | None = None,
     topology: str | None = None,
+    comm_bits=None,
     plan=None,
 ) -> jax.Array:
     """Same as ``distributed_pca`` but from pre-formed local matrices (m, d, d).
 
     This is the paper's abstract setting (each machine holds a noisy X̂ⁱ),
     useful when the local matrices are not covariances (e.g. quadratic
-    sensing's D_N, HOPE proximity matrices).  ``plan`` as in
-    ``distributed_pca`` (resolved once at the driver level).
+    sensing's D_N, HOPE proximity matrices).  ``plan`` / ``comm_bits`` as
+    in ``distributed_pca`` (resolved once at the driver level).
     """
     from repro.plan.planner import resolve_plan
 
     pl = resolve_plan(
         plan, m=mesh.shape[data_axis], d=covs.shape[-1], r=r,
         n_iter=n_iter, backend=backend, topology=topology,
-        polar=polar, orth=orth,
+        polar=polar, orth=orth, comm_bits=comm_bits,
     )
 
     def shard_fn(cov_shard: jax.Array) -> jax.Array:

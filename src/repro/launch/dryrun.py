@@ -315,17 +315,18 @@ def dryrun_paper_pca(
     *, multi_pod: bool = False, device_count=None, verbose=True,
     backend: Optional[str] = None, polar: Optional[str] = None,
     orth: Optional[str] = None, topology: Optional[str] = None,
-    plan=None, explain: bool = False, calibration=None,
+    comm_bits=None, plan=None, explain: bool = False, calibration=None,
     plan_device: Optional[str] = None,
 ):
     """Dry-run the paper's own workload (distributed PCA, Algorithm 2).
 
     ``backend`` selects the compute path ("xla" | "pallas" | "auto") and
     ``topology`` the communication schedule ("psum" | "gather" | "ring" |
-    "auto", see ``repro.comm``); the collective-bytes accounting shows the
-    topology trade directly, and the record carries the analytic
-    words-per-round prediction from ``repro.comm.comm_cost`` next to the
-    measured HLO breakdown.  ``polar`` selects the r x r rotation method
+    "auto", see ``repro.comm``); ``comm_bits`` the wire precision of its
+    payloads (32 | 16 | 8 | "auto").  The collective-bytes accounting
+    shows the topology and precision trades directly, and the record
+    carries the analytic bits-per-round prediction from
+    ``repro.comm.comm_cost`` next to the measured HLO breakdown.  ``polar`` selects the r x r rotation method
     ("svd" | "newton-schulz"); with "newton-schulz" the lowered graph is
     SVD-free, which the HLO accounting reflects.  ``orth`` selects the
     per-round orthonormalization ("qr" | "cholesky-qr2"); the SVD- and
@@ -355,17 +356,20 @@ def dryrun_paper_pca(
     pl = planlib.resolve_plan(
         plan, m=m_agg, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter,
         backend=backend, topology=topology, polar=polar, orth=orth,
-        calibration=calibration, device_kind=plan_device,
+        comm_bits=comm_bits, calibration=calibration,
+        device_kind=plan_device,
     )
     if explain:
         _, table = planlib.explain(
             m=m_agg, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter,
             backend=backend, topology=topology, polar=polar, orth=orth,
-            calibration=calibration, plan=pl, device_kind=plan_device,
+            comm_bits=comm_bits, calibration=calibration, plan=pl,
+            device_kind=plan_device,
         )
         print(table)
     topo = pl.topology
-    cost = comm_cost(topo, m=m_agg, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter)
+    cost = comm_cost(topo, m=m_agg, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter,
+                     comm_bits=pl.comm_bits)
     samples_like = jax.ShapeDtypeStruct(
         (n_data * pcfg.n_per_shard, pcfg.d), jnp.float32
     )
@@ -378,12 +382,14 @@ def dryrun_paper_pca(
         "polar": pl.polar,
         "orth": pl.orth,
         "topology": topo,
+        "comm_bits": pl.comm_bits,
         "plan_source": pl.source,
         "predicted_collective_words": cost.words,
-        # f32 bases: one word = 4 bytes; directly comparable to the
-        # aggregation's share of ``collective_breakdown`` below.
+        "predicted_collective_bits": cost.bits,
+        # Wire bytes at the plan's comm_bits tier; directly comparable to
+        # the aggregation's share of ``collective_breakdown`` below.
         "predicted_collective_bytes": {
-            k: 4 * v for k, v in cost.hlo_words.items() if v
+            k: v for k, v in cost.hlo_bytes.items() if v
         },
         "mesh": {"shape": list(mesh.shape.values()), "axes": list(mesh.axis_names)},
     }
@@ -427,6 +433,7 @@ def main():
                     help="train_step with eigen-compressed DP gradients")
     from repro.plan import (
         BACKEND_CHOICES,
+        COMM_BITS_CHOICES,
         ORTH_CHOICES,
         PLAN_CHOICES,
         POLAR_CHOICES,
@@ -447,6 +454,11 @@ def main():
                     help="communication schedule for --paper-pca "
                          "(repro.comm); the record carries the cost-model "
                          "prediction next to the measured HLO bytes")
+    ap.add_argument("--comm-bits", default=None, choices=COMM_BITS_CHOICES,
+                    help="wire precision of the --paper-pca collectives "
+                         "(repro.comm.quantize); the record carries the "
+                         "bits prediction next to the measured HLO bytes; "
+                         "'auto' defers to the planner, default 32")
     ap.add_argument("--plan", default="none", choices=PLAN_CHOICES,
                     help="'auto': resolve the four --paper-pca knobs with "
                          "the repro.plan cost model (explicit flags are "
@@ -537,6 +549,7 @@ def main():
                 rec = dryrun_paper_pca(multi_pod=mp, device_count=args.device_count,
                                        backend=args.backend, polar=args.polar,
                                        orth=args.orth, topology=args.topology,
+                                       comm_bits=args.comm_bits,
                                        plan="auto" if args.plan == "auto" else None,
                                        explain=args.explain, calibration=cal,
                                        plan_device=args.plan_device)

@@ -6,12 +6,14 @@ Runs one-shot Procrustes-fixed distributed PCA over the host mesh's data
 axis and reports subspace distances vs. the centralized estimator — the
 production entry point for the algorithm the paper contributes.
 
-``--plan auto`` hands the four execution knobs (``--backend``,
-``--topology``, ``--polar``, ``--orth``; any explicitly passed flag
-stays a pin) to the cost-model planner (``repro.plan``); ``--explain``
-prints the scored plan table — every cell's predicted communication
-words (the verified ``repro.comm.comm_cost`` model, byte for byte),
-FLOPs, and roofline terms, with the chosen cell marked.  ``--calibrate
+``--plan auto`` hands the five execution knobs (``--backend``,
+``--topology``, ``--polar``, ``--orth``, ``--comm-bits``; any
+explicitly passed flag stays a pin, and the wire-precision axis is
+planned only under an explicit ``--comm-bits auto``) to the cost-model
+planner (``repro.plan``); ``--explain`` prints the scored plan table —
+every cell's predicted communication words and wire bits (the verified
+``repro.comm.comm_cost`` model, byte for byte), FLOPs, and roofline
+terms, with the chosen cell marked.  ``--calibrate
 BENCH_aggregate.json`` refines the planner's latency/throughput
 constants from a recorded sweep on this machine.
 """
@@ -55,6 +57,7 @@ def run(
     polar: str | None = None,
     orth: str | None = None,
     topology: str | None = None,
+    comm_bits=None,
     plan=None,
     explain: bool = False,
     calibration=None,
@@ -67,12 +70,13 @@ def run(
     # covariance backend, and the printed table all see the same Plan.
     pl = planlib.resolve_plan(
         plan, m=m, d=d, r=r, n_iter=n_iter, backend=backend,
-        topology=topology, polar=polar, orth=orth, calibration=calibration,
+        topology=topology, polar=polar, orth=orth, comm_bits=comm_bits,
+        calibration=calibration,
     )
     if explain:
         _, table = planlib.explain(
             m=m, d=d, r=r, n_iter=n_iter, backend=backend,
-            topology=topology, polar=polar, orth=orth,
+            topology=topology, polar=polar, orth=orth, comm_bits=comm_bits,
             calibration=calibration, plan=pl,
         )
         print(table)
@@ -105,8 +109,10 @@ def run(
         "orth": pl.orth,
         "topology": pl.topology,
         "ring_chunk": pl.ring_chunk,
+        "comm_bits": pl.comm_bits,
         "plan_source": pl.source,
         "predicted_words": pl.words,
+        "predicted_bits": pl.bits,
         "dist_aligned": float(dist_2(v_dist, v1)),
         "dist_central": float(dist_2(v_cent, v1)),
         "dist_naive": float(dist_2(naive_average(vs), v1)),
@@ -119,6 +125,7 @@ def run(
 def main():
     from repro.plan import (
         BACKEND_CHOICES,
+        COMM_BITS_CHOICES,
         ORTH_CHOICES,
         PLAN_CHOICES,
         POLAR_CHOICES,
@@ -152,11 +159,19 @@ def main():
                          "all-gather, or the overlapped ring; auto keeps "
                          "the historical backend pairing (or defers to "
                          "the planner under --plan auto)")
+    ap.add_argument("--comm-bits", default=None, choices=COMM_BITS_CHOICES,
+                    help="wire precision of the aggregation collectives "
+                         "(repro.comm.quantize): 32 exact, 16 bf16 cast, "
+                         "8 stochastic int8 with per-column scales and "
+                         "error feedback; 'auto' lets the planner trade "
+                         "precision against bandwidth; default 32")
     ap.add_argument("--plan", default="none", choices=PLAN_CHOICES,
                     help="'auto': score every (backend x topology x polar "
-                         "x orth) cell with the repro.plan cost model and "
-                         "run the cheapest (explicit knob flags act as "
-                         "pins); 'none': legacy per-knob resolution")
+                         "x orth x comm_bits) cell with the repro.plan "
+                         "cost model and run the cheapest (explicit knob "
+                         "flags act as pins; comm_bits stays pinned at 32 "
+                         "unless --comm-bits auto); 'none': legacy "
+                         "per-knob resolution")
     ap.add_argument("--explain", action="store_true",
                     help="print the scored plan table (predicted words / "
                          "flops / roofline terms per cell, chosen cell "
@@ -175,8 +190,8 @@ def main():
     _, stats = run(
         args.d, args.r, args.n_per_shard, n_iter=args.n_iter,
         solver=args.solver, backend=args.backend, polar=args.polar,
-        orth=args.orth, topology=args.topology, plan=plan,
-        explain=args.explain, calibration=cal,
+        orth=args.orth, topology=args.topology, comm_bits=args.comm_bits,
+        plan=plan, explain=args.explain, calibration=cal,
     )
     for k, v in stats.items():
         print(f"{k}: {v}")

@@ -53,6 +53,11 @@ class EigenCompressConfig:
     # above apply as-is), "auto" (the repro.plan cost model decides the
     # free knobs, with `topology` as a pin), or a concrete repro.plan.Plan.
     plan: Optional[Any] = None
+    # Wire precision of the refresh collective's payloads (32 | 16 | 8 |
+    # "auto"; repro.comm.quantize).  The lossy tiers carry their own
+    # per-round error feedback inside the collective, independent of the
+    # gradient-level `error_feedback` below.
+    comm_bits: Any = 32
     error_feedback: bool = True
     bf16_psum: bool = False  # bf16 all-reduce for UNcompressed leaves
 
@@ -118,11 +123,11 @@ def refresh_basis(
         # Align against previous basis when initialized, else shard-0 default.
         v_prev = procrustes_average_collective(
             v_loc, axis_name=axis_name, n_iter=cfg.n_iter, ref=prev,
-            topology=cfg.topology, plan=cfg.plan,
+            topology=cfg.topology, comm_bits=cfg.comm_bits, plan=cfg.plan,
         )
         v_new = procrustes_average_collective(
             v_loc, axis_name=axis_name, n_iter=cfg.n_iter,
-            topology=cfg.topology, plan=cfg.plan,
+            topology=cfg.topology, comm_bits=cfg.comm_bits, plan=cfg.plan,
         )
         return jnp.where(initialized, v_prev, v_new)
 

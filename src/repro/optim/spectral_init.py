@@ -32,17 +32,20 @@ def distributed_spectral_init(
     polar: str | None = None,
     orth: str | None = None,
     topology: str | None = None,
+    comm_bits=None,
     plan=None,
 ) -> jax.Array:
     """a: (N, d) design vectors, y: (N,) measurements, sharded over the mesh.
 
     ``backend`` selects the compute path ("xla" | "pallas" | "auto"),
     ``polar`` the rotation method ("svd" | "newton-schulz"), ``orth``
-    the per-round orthonormalization ("qr" | "cholesky-qr2"), and
+    the per-round orthonormalization ("qr" | "cholesky-qr2"),
     ``topology`` the communication schedule ("psum" | "gather" | "ring" |
-    "auto"), see ``repro.core.distributed`` / ``repro.comm``.
-    ``plan=None|"auto"|Plan`` resolves all four through the execution
-    planner (``repro.plan``), resolved once here at the driver level.
+    "auto"), and ``comm_bits`` the wire precision of its payloads
+    (32 | 16 | 8 | "auto"), see ``repro.core.distributed`` /
+    ``repro.comm``.  ``plan=None|"auto"|Plan`` resolves all five through
+    the execution planner (``repro.plan``), resolved once here at the
+    driver level.
     Returns the (d, r) Procrustes-averaged spectral initialiser X_0.
     """
     from repro.plan.planner import resolve_plan
@@ -50,6 +53,7 @@ def distributed_spectral_init(
     pl = resolve_plan(
         plan, m=mesh.shape[data_axis], d=a.shape[-1], r=r, n_iter=n_iter,
         backend=backend, topology=topology, polar=polar, orth=orth,
+        comm_bits=comm_bits,
     )
 
     def shard_fn(a_s, y_s):

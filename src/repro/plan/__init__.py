@@ -1,13 +1,14 @@
-"""Execution planner: one documented decision over the four knobs.
+"""Execution planner: one documented decision over the five knobs.
 
-``repro.plan`` turns the aggregation's four independent switches
-(``backend`` x ``topology`` x ``polar`` x ``orth``) plus ``ring_chunk``
-into a single cost-model-driven decision:
+``repro.plan`` turns the aggregation's five independent switches
+(``backend`` x ``topology`` x ``polar`` x ``orth`` x ``comm_bits``)
+plus ``ring_chunk`` into a single cost-model-driven decision:
 
   * ``plan_aggregation(m=..., d=..., r=...)`` scores every valid cell
-    with the verified ``repro.comm.comm_cost`` words model plus the
+    with the verified ``repro.comm.comm_cost`` bits model plus the
     ``repro.plan.roofline`` compute/bandwidth/latency model and returns
-    the cheapest feasible ``Plan``;
+    the cheapest feasible ``Plan`` (the wire-precision axis is scored
+    only under an explicit ``comm_bits="auto"``);
   * every aggregation entry point takes ``plan=None|"auto"|Plan`` and
     funnels through ``resolve_plan`` (``None`` is byte-identical legacy
     behavior);
@@ -24,6 +25,8 @@ from repro.plan.calibration import Calibration, load_calibration  # noqa: F401
 from repro.plan.planner import (  # noqa: F401
     BACKEND_CHOICES,
     BACKENDS_CONCRETE,
+    COMM_BITS,
+    COMM_BITS_CHOICES,
     CellScore,
     MIN_RING_CHUNK,
     ORTH_CHOICES,

@@ -1,16 +1,17 @@
 """Cost-model-driven execution planner for the aggregation hot path.
 
-The repo's aggregation takes four orthogonal switches — ``backend``
+The repo's aggregation takes five orthogonal switches — ``backend``
 ("xla" | "pallas"), ``topology`` ("psum" | "gather" | "ring"),
-``polar`` ("svd" | "newton-schulz"), ``orth`` ("qr" | "cholesky-qr2") —
-plus the ring's ``ring_chunk``.  Until this module they were four
-independent knobs resolved by ad-hoc rules (``resolve_backend``'s
-on-TPU test, ``resolve_topology``'s historical pairing) and two the
-caller picked blind.  The planner makes the choice one documented,
-machine-checkable decision: given (m, d, r, n_iter, device kind) it
-scores **every valid cell** of the cube with
+``polar`` ("svd" | "newton-schulz"), ``orth`` ("qr" | "cholesky-qr2"),
+``comm_bits`` (32 | 16 | 8 wire precision) — plus the ring's
+``ring_chunk``.  Until this module they were independent knobs resolved
+by ad-hoc rules (``resolve_backend``'s on-TPU test,
+``resolve_topology``'s historical pairing) or picked blind.  The
+planner makes the choice one documented, machine-checkable decision:
+given (m, d, r, n_iter, device kind) it scores **every valid cell** of
+the cube with
 
-  * the analytic words-per-round communication model
+  * the analytic bits-per-round communication model
     (``repro.comm.comm_cost`` — the §2.2 table, verified byte-for-byte
     against compiled HLO by CI), and
   * a compute/bandwidth/latency roofline priced by the per-device-kind
@@ -33,7 +34,11 @@ Entry points: every aggregation function takes ``plan=``:
   * ``plan="auto"``  — the planner decides every knob the caller left
                        free; a concrete per-knob argument (e.g.
                        ``backend="pallas"``) is honoured as a *pin* and
-                       only the remaining axes are scored.
+                       only the remaining axes are scored.  Exception:
+                       ``comm_bits`` defaults to a **pin at 32** — wire
+                       precision changes the numbers on the wire, so the
+                       planner only trades it when the caller passes
+                       ``comm_bits="auto"`` explicitly.
   * ``plan=Plan(...)`` — a fully resolved plan (e.g. from
                        ``plan_aggregation`` or a previous ``--explain``
                        run) used verbatim.
@@ -50,6 +55,7 @@ import dataclasses
 import math
 from typing import List, Optional, Sequence, Tuple, Union
 
+from repro.comm.quantize import COMM_BITS, COMM_BITS_CHOICES, resolve_comm_bits
 from repro.comm.topology import TOPOLOGIES, TOPOLOGY_CHOICES, comm_cost
 from repro.core.orthonorm import ORTH_METHODS
 from repro.core.procrustes import DEFAULT_NS_ITERS, POLAR_METHODS
@@ -65,6 +71,8 @@ __all__ = [
     "TOPOLOGY_CHOICES",
     "POLAR_CHOICES",
     "ORTH_CHOICES",
+    "COMM_BITS",
+    "COMM_BITS_CHOICES",
     "PLAN_CHOICES",
     "MIN_RING_CHUNK",
     "choose_ring_chunk",
@@ -148,14 +156,17 @@ def stacked_round_flops(
 
 @dataclasses.dataclass(frozen=True)
 class CellScore:
-    """One scored cell of the (backend x topology x polar x orth) cube."""
+    """One scored cell of the (backend x topology x polar x orth x
+    comm_bits) cube."""
 
     backend: str
     topology: str
     polar: str
     orth: str
+    comm_bits: int
     ring_chunk: int
     words: int            # logical collective payload (comm_cost.words)
+    bits: int             # wire bits at comm_bits (comm_cost.bits)
     flops: float          # predicted per-device flops
     wire_bytes: float     # predicted per-device wire bytes
     hbm_bytes: float      # predicted per-device HBM bytes streamed
@@ -185,7 +196,9 @@ class Plan:
     polar: str
     orth: str
     ring_chunk: int
+    comm_bits: int = 32  # wire precision: part of the program, so compared
     words: int = dataclasses.field(default=0, compare=False)
+    bits: int = dataclasses.field(default=0, compare=False)
     flops: float = dataclasses.field(default=0.0, compare=False)
     total_s: float = dataclasses.field(default=0.0, compare=False)
     device_kind: str = dataclasses.field(default="", compare=False)
@@ -216,6 +229,7 @@ def score_cells(
     polar: Optional[str] = None,
     orth: Optional[str] = None,
     ring_chunk: Optional[int] = None,
+    comm_bits=None,
     ref_broadcast: bool = True,
     context: str = "collective",
     calibration: Optional[Calibration] = None,
@@ -223,11 +237,13 @@ def score_cells(
     """Score every cell of the cube compatible with the given pins.
 
     Enumeration order is the tie-break: backends in registry order (xla
-    first), then topologies (psum first), polars, orths — so exact score
-    ties resolve to the conservative cell deterministically.
+    first), then topologies (psum first), polars, orths, comm_bits (32
+    first) — so exact score ties resolve to the conservative cell
+    deterministically.  ``comm_bits=None`` pins the exact wire (32); the
+    precision axis is scored only on an explicit ``comm_bits="auto"``.
     ``context="stacked"`` scores the already-gathered form (topology
-    fixed, zero communication).  Returns cells sorted by (feasibility,
-    predicted seconds, enumeration order).
+    fixed, zero communication, wire precision moot).  Returns cells
+    sorted by (feasibility, predicted seconds, enumeration order).
     """
     if context not in ("collective", "stacked"):
         raise ValueError(f"context must be collective|stacked, got {context!r}")
@@ -246,19 +262,26 @@ def score_cells(
     topos = (pin_t,) if pin_t else (("gather",) if context == "stacked" else TOPOLOGIES)
     polars = (pin_p,) if pin_p else POLAR_METHODS
     orths = (pin_o,) if pin_o else ORTH_METHODS
+    if comm_bits == "auto" and context == "collective":
+        cbs = COMM_BITS
+    else:
+        cbs = (resolve_comm_bits(None if comm_bits == "auto" else comm_bits),)
 
     scored: List[CellScore] = []
     for b in backends:
         for t in topos:
             for p in polars:
                 for o in orths:
-                    scored.append(_score_one(
-                        b, t, p, o,
-                        m=m, d=d, r=r, n_iter=n_iter, device=device,
-                        ring_chunk=ring_chunk, ref_broadcast=ref_broadcast,
-                        context=context, backend_pinned=pin_b is not None,
-                        topology_pinned=pin_t is not None,
-                    ))
+                    for cb in cbs:
+                        scored.append(_score_one(
+                            b, t, p, o, cb,
+                            m=m, d=d, r=r, n_iter=n_iter, device=device,
+                            ring_chunk=ring_chunk,
+                            ref_broadcast=ref_broadcast,
+                            context=context,
+                            backend_pinned=pin_b is not None,
+                            topology_pinned=pin_t is not None,
+                        ))
     # Stable sort: feasible first, then cheapest; enumeration order
     # breaks exact ties.
     scored.sort(key=lambda c: (not c.feasible, c.total_s))
@@ -272,7 +295,7 @@ def _default_device_kind() -> str:
 
 
 def _score_one(
-    b: str, t: str, p: str, o: str,
+    b: str, t: str, p: str, o: str, cb: int,
     *,
     m: int, d: int, r: int, n_iter: int,
     device: DeviceModel,
@@ -304,21 +327,35 @@ def _score_one(
             feasible = False
             notes.append("pallas compiles on TPU only")
 
+    if t == "psum" and cb == 8 and m > 126 and context == "collective":
+        # The shared-scale int8 psum sums s8 payloads on the wire; its
+        # overflow headroom rule needs m <= 126 (repro.comm.quantize).
+        feasible = False
+        notes.append("int8 psum overflow headroom needs m <= 126")
+
     # ---- communication ---------------------------------------------------
     if context == "stacked":
-        words, wire_bytes, colls = 0, 0.0, 0
+        words, bits, wire_bytes, colls = 0, 0, 0.0, 0
     else:
         cost = comm_cost(
-            t, m=m, d=d, r=r, n_iter=n, ref_broadcast=ref_broadcast
+            t, m=m, d=d, r=r, n_iter=n, ref_broadcast=ref_broadcast,
+            comm_bits=cb,
         )
         words = cost.words
-        wire_bytes = 4.0 * sum(cost.hlo_words.values())
+        bits = cost.bits
+        wire_bytes = float(sum(cost.hlo_bytes.values()))
         bcast = 1 if ref_broadcast else 0
         colls = {
             "psum": bcast + n,
             "gather": 1,
             "ring": bcast + n * (m - 1),  # chunk permutes pipeline per hop
         }[t]
+        if cb == 8:
+            # The f32[r] scale rides as a second small collective per
+            # message (psum's shared-scale pmax, gather's scale gather,
+            # the broadcast's scale psum); ring hops pipeline theirs with
+            # the chunk permutes, so only the broadcast doubles there.
+            colls += {"psum": bcast + n, "gather": 1, "ring": bcast}[t]
     if m <= 1:
         # A 1-shard axis puts nothing on the wire; every schedule
         # degenerates to the serial rounds.
@@ -375,6 +412,12 @@ def _score_one(
         ops = n * (_BASE_STAGE_OPS + polar_ops + orth_ops)
         launches = 0
         lapack = n * (polar_lapack + orth_lapack)
+    if cb != 32 and context == "collective":
+        # Encode/decode overhead of the wire codec (cast for bf16; scale +
+        # stochastic round + convert for int8).  Small by design, but it
+        # makes 32 strictly cheapest when the wire saves nothing (m <= 1),
+        # so "auto" never quantizes for free.
+        ops += (1 if cb == 16 else 3) * (n + 1)
     latency_s = (
         ops * device.op_latency_s
         + launches * device.launch_latency_s
@@ -390,8 +433,10 @@ def _score_one(
         total_s = comm_s + max(compute_s, memory_s) + latency_s
 
     return CellScore(
-        backend=b, topology=t, polar=p, orth=o, ring_chunk=chunk,
-        words=words, flops=flops, wire_bytes=wire_bytes, hbm_bytes=hbm_bytes,
+        backend=b, topology=t, polar=p, orth=o, comm_bits=cb,
+        ring_chunk=chunk,
+        words=words, bits=bits, flops=flops,
+        wire_bytes=wire_bytes, hbm_bytes=hbm_bytes,
         comm_s=comm_s, compute_s=compute_s, memory_s=memory_s,
         latency_s=latency_s, total_s=total_s,
         feasible=feasible, note="; ".join(notes),
@@ -410,6 +455,7 @@ def plan_aggregation(
     polar: Optional[str] = None,
     orth: Optional[str] = None,
     ring_chunk: Optional[int] = None,
+    comm_bits=None,
     ref_broadcast: bool = True,
     context: str = "collective",
     calibration: Optional[Calibration] = None,
@@ -417,7 +463,10 @@ def plan_aggregation(
     """Score the cube and return the cheapest feasible plan.
 
     Pins (concrete knob values) restrict the enumeration; ``None`` /
-    ``"auto"`` axes are planned.  If the pins force every cell
+    ``"auto"`` axes are planned — except ``comm_bits``, where ``None``
+    pins 32 and only ``"auto"`` frees the precision axis (wire precision
+    changes the numbers, so quantizing is never implicit).  If the pins
+    force every cell
     infeasible (e.g. ``backend="pallas"`` off-TPU), the cheapest pinned
     cell is returned with its note — pins are a user decision the
     planner annotates rather than overrides.
@@ -436,7 +485,8 @@ def plan_aggregation(
         cells = score_cells(
             m=m, d=d, r=r, n_iter=n_iter, device_kind=device_kind,
             backend=backend, topology=topo_pin, polar=polar, orth=orth,
-            ring_chunk=ring_chunk, ref_broadcast=ref_broadcast,
+            ring_chunk=ring_chunk, comm_bits=comm_bits,
+            ref_broadcast=ref_broadcast,
             context=context, calibration=calibration,
         )
         return cells[0]  # sorted feasible-first, cheapest-first
@@ -457,7 +507,8 @@ def plan_aggregation(
         best = _choose(topology)
     return Plan(
         backend=best.backend, topology=best.topology, polar=best.polar,
-        orth=best.orth, ring_chunk=best.ring_chunk, words=best.words,
+        orth=best.orth, ring_chunk=best.ring_chunk,
+        comm_bits=best.comm_bits, words=best.words, bits=best.bits,
         flops=best.flops, total_s=best.total_s,
         device_kind=device_kind or _default_device_kind(),
         source="planner",
@@ -476,6 +527,7 @@ def resolve_plan(
     polar: Optional[str] = None,
     orth: Optional[str] = None,
     ring_chunk: Optional[int] = None,
+    comm_bits=None,
     ref_broadcast: bool = True,
     context: str = "collective",
     device_kind: Optional[str] = None,
@@ -505,35 +557,39 @@ def resolve_plan(
         )
         p = polar or "svd"
         o = orth or "qr"
-        if "auto" in (p, o):
-            # New-style "auto" polar/orth under the legacy path: a
-            # single-knob plan with everything else pinned as resolved —
-            # including the legacy ring chunk, so only the free knob
-            # differs from a plain plan=None resolution.
+        if "auto" in (p, o) or comm_bits == "auto":
+            # New-style "auto" polar/orth/comm_bits under the legacy
+            # path: a single-knob plan with everything else pinned as
+            # resolved — including the legacy ring chunk, so only the
+            # free knob differs from a plain plan=None resolution.
             return plan_aggregation(
                 m=m, d=d, r=r, n_iter=n_iter, device_kind=device_kind,
                 backend=b, topology=t if context == "collective" else None,
                 polar=p, orth=o,
                 ring_chunk=ring_chunk or DEFAULT_RING_CHUNK,
+                comm_bits=comm_bits,
                 ref_broadcast=ref_broadcast, context=context,
                 calibration=calibration,
             )
-        cost_words = (
-            comm_cost(t, m=m, d=d, r=r, n_iter=max(n_iter, 1),
-                      ref_broadcast=ref_broadcast).words
-            if context == "collective" else 0
-        )
+        cb = resolve_comm_bits(comm_bits)
+        if context == "collective":
+            cost = comm_cost(t, m=m, d=d, r=r, n_iter=max(n_iter, 1),
+                             ref_broadcast=ref_broadcast, comm_bits=cb)
+            cost_words, cost_bits = cost.words, cost.bits
+        else:
+            cost_words, cost_bits = 0, 0
         return Plan(
             backend=b, topology=t, polar=p, orth=o,
-            ring_chunk=ring_chunk or DEFAULT_RING_CHUNK,
-            words=cost_words, device_kind=device_kind or "",
+            ring_chunk=ring_chunk or DEFAULT_RING_CHUNK, comm_bits=cb,
+            words=cost_words, bits=cost_bits, device_kind=device_kind or "",
             source="legacy",
         )
     if plan == "auto":
         return plan_aggregation(
             m=m, d=d, r=r, n_iter=n_iter, device_kind=device_kind,
             backend=backend, topology=topology, polar=polar, orth=orth,
-            ring_chunk=ring_chunk, ref_broadcast=ref_broadcast,
+            ring_chunk=ring_chunk, comm_bits=comm_bits,
+            ref_broadcast=ref_broadcast,
             context=context, calibration=calibration,
         )
     raise ValueError(
@@ -548,20 +604,22 @@ def resolve_plan(
 def format_plan_table(cells: Sequence[CellScore], chosen: Plan) -> str:
     """Render a scored-cell table plus the chosen-cell summary line.
 
-    The ``words`` column is ``comm_cost(...).words`` verbatim for every
-    cell, so the printed prediction matches the verified §2.2 model by
-    construction; the acceptance test re-derives the chosen cell's words
-    and compares byte for byte.
+    The ``words`` / ``bits`` columns are ``comm_cost(...)`` verbatim for
+    every cell, so the printed prediction matches the verified §2.2
+    model by construction; the acceptance test re-derives the chosen
+    cell's words and bits and compares byte for byte.
     """
     def is_chosen(c: CellScore) -> bool:
         return (
             c.backend == chosen.backend and c.topology == chosen.topology
             and c.polar == chosen.polar and c.orth == chosen.orth
+            and c.comm_bits == chosen.comm_bits
         )
 
     hdr = (
         f"{'backend':<8} {'topology':<8} {'polar':<14} {'orth':<13} "
-        f"{'chunk':>6} {'words':>12} {'flops':>10} {'comm_us':>9} "
+        f"{'cbits':>5} {'chunk':>6} {'words':>12} {'bits':>14} "
+        f"{'flops':>10} {'comm_us':>9} "
         f"{'comp_us':>9} {'mem_us':>8} {'lat_us':>8} {'total_us':>9}  note"
     )
     lines = [hdr, "-" * len(hdr)]
@@ -569,7 +627,8 @@ def format_plan_table(cells: Sequence[CellScore], chosen: Plan) -> str:
         mark = "*" if is_chosen(c) else (" " if c.feasible else "x")
         lines.append(
             f"{c.backend:<8} {c.topology:<8} {c.polar:<14} {c.orth:<13} "
-            f"{c.ring_chunk:>6} {c.words:>12} {c.flops:>10.3g} "
+            f"{c.comm_bits:>5} {c.ring_chunk:>6} {c.words:>12} "
+            f"{c.bits:>14} {c.flops:>10.3g} "
             f"{c.comm_s*1e6:>9.2f} {c.compute_s*1e6:>9.2f} "
             f"{c.memory_s*1e6:>8.2f} {c.latency_s*1e6:>8.2f} "
             f"{c.total_s*1e6:>9.2f}  {mark} {c.note}"
@@ -579,6 +638,7 @@ def format_plan_table(cells: Sequence[CellScore], chosen: Plan) -> str:
     # honest figures; ``words`` stays comm_cost-exact by construction.
     chosen_cell = next((c for c in cells if is_chosen(c)), None)
     words = chosen_cell.words if chosen_cell else chosen.words
+    bits = chosen_cell.bits if chosen_cell else chosen.bits
     flops = chosen_cell.flops if chosen_cell else chosen.flops
     total_s = chosen_cell.total_s if chosen_cell else chosen.total_s
     runner = next(
@@ -614,7 +674,8 @@ def format_plan_table(cells: Sequence[CellScore], chosen: Plan) -> str:
     lines.append(
         f"chosen: {chosen.backend}/{chosen.topology}/{chosen.polar}/"
         f"{chosen.orth} ring_chunk={chosen.ring_chunk} "
-        f"words={words} flops={flops:.6g} "
+        f"comm_bits={chosen.comm_bits} "
+        f"words={words} bits={bits} flops={flops:.6g} "
         f"predicted_total_us={total_s*1e6:.2f}{why}"
     )
     return "\n".join(lines)
@@ -632,6 +693,7 @@ def explain(
     polar: Optional[str] = None,
     orth: Optional[str] = None,
     ring_chunk: Optional[int] = None,
+    comm_bits=None,
     ref_broadcast: bool = True,
     context: str = "collective",
     calibration: Optional[Calibration] = None,
@@ -648,7 +710,8 @@ def explain(
     kwargs = dict(
         m=m, d=d, r=r, n_iter=n_iter, device_kind=device_kind,
         backend=backend, topology=topology, polar=polar, orth=orth,
-        ring_chunk=ring_chunk, ref_broadcast=ref_broadcast,
+        ring_chunk=ring_chunk, comm_bits=comm_bits,
+        ref_broadcast=ref_broadcast,
         context=context, calibration=calibration,
     )
     cells = score_cells(**kwargs)

@@ -10,8 +10,10 @@ Five properties are pinned down:
    historical ``resolve_topology`` pairing for every backend pin.
 3. Golden plans: canonical (m, d, r, device) regimes resolve to the
    documented cells (DESIGN.md §8.4), the chosen cell's predicted words
-   equal ``comm_cost(...).words`` exactly, and per-cell predicted
-   words/flops are monotone in each of m, d, r, n_iter.
+   and bits equal ``comm_cost(...)`` exactly, per-cell predictions are
+   monotone in each of m, d, r, n_iter, and the wire-precision axis
+   behaves as documented — pinned at 32 unless ``comm_bits="auto"``,
+   flipping the bandwidth-bound TPU cell to int8 when freed.
 4. The ``ring_chunk`` rule (§8.2): latency-bound bases ship whole,
    large-d bases chunk at the latency-bandwidth product with the
    MIN_RING_CHUNK floor, explicit chunks are honoured.
@@ -102,6 +104,7 @@ def test_plan_none_is_the_legacy_resolution():
             assert pl.topology == resolve_topology(topology or "auto", b_legacy)
             assert (pl.polar, pl.orth) == ("svd", "qr")
             assert pl.ring_chunk == DEFAULT_RING_CHUNK
+            assert pl.comm_bits == 32  # full-precision wires unless asked
             assert pl.source == "legacy"
 
 
@@ -172,6 +175,50 @@ def test_golden_plan_tpu_bandwidth_bound_is_psum():
     the stacked forms move m·d·r — the planner picks psum."""
     pl = plan_aggregation(m=64, d=65536, r=128, n_iter=1, device_kind="tpu")
     assert pl.topology == "psum"
+    # The wire-precision axis stays pinned at full precision by default —
+    # lossy tiers are opt-in, never a silent accuracy trade.
+    assert pl.comm_bits == 32
+    assert pl.bits == pl.words * 32
+
+
+def test_golden_plan_bandwidth_bound_flips_to_int8_when_freed():
+    """comm_bits="auto" on the bandwidth-bound TPU cell: the wire term
+    dominates the roofline, so the planner takes the 4x payload shrink
+    (d*r*8 + 32*r scale bits per message) and flips the cell to int8."""
+    pl = plan_aggregation(
+        m=64, d=65536, r=128, n_iter=1, device_kind="tpu", comm_bits="auto",
+    )
+    assert pl.comm_bits == 8
+    assert pl.bits == comm_cost(
+        pl.topology, m=64, d=65536, r=128, n_iter=1, comm_bits=8,
+    ).bits
+    assert pl.bits < pl.words * 32 / 3.9  # ~4x wire shrink
+
+
+def test_golden_plan_latency_bound_auto_keeps_full_precision():
+    """comm_bits="auto" on the latency-bound paper-scale cell: the wire
+    is not the bottleneck, so the codec's extra passes are pure cost and
+    the planner keeps 32 — quantization only wins when bandwidth-bound."""
+    pl = plan_aggregation(
+        m=8, d=512, r=16, n_iter=2, device_kind="tpu", comm_bits="auto",
+    )
+    assert pl.comm_bits == 32
+
+
+def test_int8_psum_headroom_guard():
+    """int8 psum sums m quantized payloads in s8: the shared-scale
+    headroom rule (repro.comm.quantize.wire_psum_mean) needs m <= 126,
+    so larger meshes mark the (psum, 8) cells infeasible — the planner
+    routes int8 through gather/ring instead of overflowing."""
+    cells = score_cells(
+        m=200, d=65536, r=128, n_iter=1, device_kind="tpu", comm_bits="auto",
+    )
+    psum8 = [c for c in cells if c.topology == "psum" and c.comm_bits == 8]
+    assert psum8 and all(not c.feasible for c in psum8)
+    assert "m <= 126" in psum8[0].note
+    others8 = [c for c in cells
+               if c.topology in ("gather", "ring") and c.comm_bits == 8]
+    assert any(c.feasible for c in others8)
 
 
 def test_golden_plan_tpu_xla_pin_flips_to_matmul_only_methods():
@@ -225,16 +272,22 @@ def test_chosen_words_match_comm_cost_exactly():
         dict(m=2, d=96, r=4, n_iter=1, device_kind="cpu"),
     ):
         pl = plan_aggregation(**kw)
-        expect = comm_cost(
-            pl.topology, m=kw["m"], d=kw["d"], r=kw["r"], n_iter=kw["n_iter"]
-        ).words
-        assert pl.words == expect, (kw, pl)
+        cost = comm_cost(
+            pl.topology, m=kw["m"], d=kw["d"], r=kw["r"],
+            n_iter=kw["n_iter"], comm_bits=pl.comm_bits,
+        )
+        assert pl.words == cost.words, (kw, pl)
+        assert pl.bits == cost.bits, (kw, pl)
 
 
 def test_every_scored_cell_words_match_comm_cost():
     m, d, r, n = 8, 512, 16, 2
-    for c in score_cells(m=m, d=d, r=r, n_iter=n, device_kind="tpu"):
-        assert c.words == comm_cost(c.topology, m=m, d=d, r=r, n_iter=n).words
+    for c in score_cells(m=m, d=d, r=r, n_iter=n, device_kind="tpu",
+                         comm_bits="auto"):
+        cost = comm_cost(c.topology, m=m, d=d, r=r, n_iter=n,
+                         comm_bits=c.comm_bits)
+        assert c.words == cost.words, c
+        assert c.bits == cost.bits, c
 
 
 # ------------------------------------------------------------ monotonicity --
@@ -434,13 +487,17 @@ def test_eigen_run_plan_auto_records_resolved_plan(capsys):
     ).words
     assert stats["predicted_words"] == expect
     assert f"words={expect}" in table
+    # Un-freed wire axis: pinned at 32, bits is exactly words * 32.
+    assert stats["comm_bits"] == 32
+    assert stats["predicted_bits"] == expect * 32
 
 
 # ------------------------------------------------------- CLI --explain --
 
 
 CHOSEN_RE = re.compile(
-    r"chosen: (\w+)/(\w[\w-]*)/([\w-]+)/([\w-]+) ring_chunk=(\d+) words=(\d+)"
+    r"chosen: (\w+)/(\w[\w-]*)/([\w-]+)/([\w-]+) ring_chunk=(\d+) "
+    r"comm_bits=(\d+) words=(\d+) bits=(\d+)"
 )
 
 
@@ -460,10 +517,13 @@ def test_launch_eigen_explain_words_match_model():
     )
     m = CHOSEN_RE.search(out)
     assert m, out
-    _, topo, _, _, _, words = m.groups()
-    assert int(words) == comm_cost(topo, m=8, d=96, r=4, n_iter=2).words
+    _, topo, _, _, _, cbits, words, bits = m.groups()
+    cost = comm_cost(topo, m=8, d=96, r=4, n_iter=2, comm_bits=int(cbits))
+    assert int(words) == cost.words
+    assert int(bits) == cost.bits
     # The stats echo the same resolved plan.
     assert f"predicted_words: {words}" in out
+    assert f"predicted_bits: {bits}" in out
 
 
 @pytest.mark.slow
@@ -480,14 +540,18 @@ def test_dryrun_paper_pca_explain_words_match_model(tmp_path):
     assert proc.returncode == 0, proc.stdout + proc.stderr
     m = CHOSEN_RE.search(proc.stdout)
     assert m, proc.stdout
-    _, topo, _, _, _, words = m.groups()
+    _, topo, _, _, _, cbits, words, bits = m.groups()
     from repro.configs.paper_pca import CONFIG as pcfg
 
     # Reduced single-pod mesh is (2, n//2): the data axis has 2 shards.
-    expect = comm_cost(topo, m=2, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter).words
-    assert int(words) == expect
+    cost = comm_cost(topo, m=2, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter,
+                     comm_bits=int(cbits))
+    assert int(words) == cost.words
+    assert int(bits) == cost.bits
     rec = json.load(open(os.path.join(
         str(tmp_path), "paper-pca__pca__singlepod.json")))
     assert rec["plan_source"] == "planner"
-    assert rec["predicted_collective_words"] == expect
+    assert rec["predicted_collective_words"] == cost.words
+    assert rec["predicted_collective_bits"] == cost.bits
+    assert rec["comm_bits"] == int(cbits)
     assert rec["topology"] == topo

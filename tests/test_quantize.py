@@ -1,0 +1,230 @@
+"""The wire-precision codec registry (``repro.comm.quantize``).
+
+Five properties are pinned down, one per satellite claim:
+
+1. Identity tier: the 32-bit codec round-trips exactly AND traces to
+   zero equations — full precision costs nothing, not "almost nothing".
+2. Reconstruction bounds keyed on bits: one encode/decode round trip is
+   exact at 32, within the bf16 mantissa step at 16, and within one
+   per-column quantization step at 8.
+3. Stochastic rounding is unbiased: the int8 codec's reconstruction,
+   averaged over many keys, converges to the input (E[dec(enc(x))] = x).
+4. Error feedback telescopes: over repeated lossy sends the transmitted
+   total tracks the true total to within ONE final residual — noise does
+   not accumulate with the round count.
+5. The 32-bit collective path adds no ops: the traced aggregation at
+   comm_bits=32 contains no PRNG primitives and no s8/bf16/u16 wire
+   intermediates, for every topology.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import jaxpr_primitives
+
+from repro.comm import (
+    COMM_BITS,
+    COMM_BITS_CHOICES,
+    PARITY_TOL,
+    Codec,
+    get_codec,
+    message_bits,
+    resolve_comm_bits,
+)
+
+D, R = 64, 4
+
+
+def _basis(key=0, d=D, r=R):
+    return jnp.linalg.qr(
+        jax.random.normal(jax.random.PRNGKey(key), (d, r))
+    )[0]
+
+
+# ------------------------------------------------------------- registry --
+
+
+def test_registry_and_resolution():
+    assert COMM_BITS == (32, 16, 8)
+    assert COMM_BITS_CHOICES == ("32", "16", "8", "auto")
+    assert set(PARITY_TOL) == set(COMM_BITS)
+    assert PARITY_TOL[32] <= PARITY_TOL[16] <= PARITY_TOL[8]
+    for spelled, want in ((None, 32), (32, 32), ("16", 16), (8, 8)):
+        assert resolve_comm_bits(spelled) == want
+        assert get_codec(spelled).bits == want
+    with pytest.raises(ValueError, match="planner"):
+        resolve_comm_bits("auto")
+    with pytest.raises(ValueError):
+        resolve_comm_bits(4)
+    with pytest.raises(ValueError):
+        resolve_comm_bits("fast")
+
+
+def test_codec_properties():
+    assert not Codec(32).lossy and not Codec(32).stochastic
+    assert Codec(16).lossy and not Codec(16).stochastic
+    assert Codec(8).lossy and Codec(8).stochastic
+    assert Codec(16).wire_dtype == jnp.bfloat16
+    assert Codec(8).wire_dtype == jnp.int8
+    # int8 without a key refuses rather than rounding deterministically.
+    with pytest.raises(ValueError, match="key"):
+        Codec(8).encode(_basis())
+
+
+def test_message_bits_formula():
+    assert message_bits(D, R, 32) == D * R * 32
+    assert message_bits(D, R, 16) == D * R * 16
+    assert message_bits(D, R, 8) == D * R * 8 + 32 * R
+    assert message_bits(D, R, None) == D * R * 32
+
+
+# ---------------------------------------------- 1. identity tier is free --
+
+
+def test_identity_roundtrip_exact():
+    x = _basis()
+    data, scale = Codec(32).encode(x)
+    assert scale is None
+    assert (Codec(32).decode(data) == x).all()
+    assert (Codec(32).residual(x, data) == 0).all()
+
+
+def test_identity_tier_traces_to_zero_equations():
+    codec = Codec(32)
+
+    def roundtrip(x):
+        data, scale = codec.encode(x)
+        return codec.decode(data, scale)
+
+    jaxpr = jax.make_jaxpr(roundtrip)(_basis())
+    assert len(jaxpr.eqns) == 0, jaxpr
+
+
+# ------------------------------------- 2. bit-keyed reconstruction bounds --
+
+
+@pytest.mark.parametrize("bits", [16, 8])
+def test_lossy_reconstruction_bound(bits):
+    x = _basis()
+    codec = Codec(bits)
+    key = jax.random.PRNGKey(7) if codec.stochastic else None
+    data, scale = codec.encode(x, key=key)
+    assert data.dtype == codec.wire_dtype
+    got = codec.decode(data, scale)
+    if bits == 16:
+        # bf16 keeps 8 mantissa bits: elementwise relative step <= 2^-8.
+        bound = jnp.abs(x) * 2.0 ** -8 + 1e-12
+    else:
+        # One stochastic step per element: |x - dec| < colmax / 127.
+        bound = jnp.max(jnp.abs(x), axis=0) / 127.0
+    assert (jnp.abs(got - x) <= bound).all()
+    # The residual is exactly what decoding misses (the EF contract).
+    resid = codec.residual(x, data, scale)
+    assert jnp.allclose(resid, x - got, atol=0, rtol=0)
+
+
+# --------------------------------------- 3. stochastic rounding unbiased --
+
+
+def test_int8_stochastic_rounding_is_unbiased():
+    """Mean reconstruction over independent keys converges to the input;
+    200 seeds bring the noise down to ~step/sqrt(200), tested at 3 sigma."""
+    x = _basis(key=5)
+    codec = Codec(8)
+
+    def rt(key):
+        data, scale = codec.encode(x, key=key)
+        return codec.decode(data, scale)
+
+    n = 200
+    keys = jax.random.split(jax.random.PRNGKey(11), n)
+    mean = jnp.mean(jax.vmap(rt)(keys), axis=0)
+    step = jnp.max(jnp.abs(x), axis=0) / 127.0  # per-column quant step
+    # Bernoulli rounding noise: var = p(1-p) step^2 <= step^2/4, so the
+    # per-element sd is <= step/2 and the mean of n draws has sd/sqrt(n).
+    bound = 3.0 * step / (2.0 * jnp.sqrt(float(n)))
+    assert (jnp.abs(mean - x) <= bound).mean() > 0.99
+    # And a single draw is NOT exact (the test has teeth).
+    assert not jnp.allclose(rt(keys[0]), x, atol=1e-6)
+
+
+# ------------------------------------------ 4. error-feedback telescoping --
+
+
+@pytest.mark.parametrize("bits", [16, 8])
+def test_error_feedback_telescopes_over_rounds(bits):
+    """k lossy sends with EF: the transmitted total equals the true total
+    minus ONE final residual — so the accumulated error stays bounded by
+    a single quantization step instead of growing like k steps."""
+    codec = Codec(bits)
+    k = 12
+    sends = [_basis(key=i) * (1.0 + 0.1 * i) for i in range(k)]
+    err = jnp.zeros_like(sends[0])
+    transmitted = jnp.zeros_like(sends[0])
+    for i, s in enumerate(sends):
+        eff = s + err
+        key = jax.random.PRNGKey(100 + i) if codec.stochastic else None
+        data, scale = codec.encode(eff, key=key)
+        t = codec.decode(data, scale)
+        err = codec.residual(eff, data, scale)
+        transmitted = transmitted + t
+    true_total = sum(sends)
+    # Telescoping identity: sum(t_i) == sum(s_i) - err_final, exactly.
+    assert jnp.allclose(transmitted, true_total - err, atol=1e-5)
+    # The final residual is one step, not k steps: bound it per element.
+    step = jnp.max(jnp.abs(true_total), axis=0) * (
+        2.0 ** -8 if bits == 16 else 2.0 / 127.0
+    )
+    assert (jnp.abs(transmitted - true_total) <= step + 1e-6).all()
+
+
+# ------------------------------- 5. the 32-bit collective path is clean --
+
+
+@pytest.mark.parametrize("topology", ["psum", "gather", "ring"])
+def test_collective_at_32_bits_has_no_codec_ops(topology):
+    """comm_bits=32 through the full collective must add nothing: no PRNG
+    primitives in the jaxpr and no s8/bf16/u16 wire intermediates — the
+    quantized tier is strictly opt-in."""
+    from repro.core.distributed import procrustes_average_collective
+
+    m, d, r = 4, 60, 3
+
+    def agg(v):
+        return procrustes_average_collective(
+            v, axis_name="mach", n_iter=2, topology=topology, comm_bits=32,
+        )
+
+    traced = jax.make_jaxpr(agg, axis_env=[("mach", m)])(
+        jnp.zeros((d, r), jnp.float32)
+    )
+    prims = jaxpr_primitives(traced)
+    assert not any("threefry" in p or "random" in p for p in prims), prims
+    text = str(traced)
+    for wire in ("i8[", "s8[", "bf16[", "u16["):
+        assert wire not in text, (topology, wire)
+
+
+@pytest.mark.parametrize("topology", ["psum", "gather", "ring"])
+def test_collective_at_8_bits_reaches_the_wire(topology):
+    """Positive control for the test above: at comm_bits=8 the same trace
+    DOES contain the s8 wire payload and the PRNG stream."""
+    from repro.core.distributed import procrustes_average_collective
+
+    m, d, r = 4, 60, 3
+
+    def agg(v):
+        return procrustes_average_collective(
+            v, axis_name="mach", n_iter=2, topology=topology, comm_bits=8,
+        )
+
+    traced = jax.make_jaxpr(agg, axis_env=[("mach", m)])(
+        jnp.zeros((d, r), jnp.float32)
+    )
+    text = str(traced)
+    assert "i8[" in text, topology
+    prims = jaxpr_primitives(traced)
+    assert any("random" in p or "threefry" in p for p in prims), prims
