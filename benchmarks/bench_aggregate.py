@@ -58,20 +58,26 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
-SCHEMA = "bench_aggregate/v4"
+SCHEMA = "bench_aggregate/v5"
 # v1 predates the ``orth=`` switch (upgraded with orth="qr"); v2 predates
 # the ``comm`` communication-topology axis (upgraded with the historical
 # backend pairing); v3 predates the ``bits`` wire-precision axis
-# (upgraded with bits=32 — every pre-v4 cell ran full-precision wires).
-# ``load`` upgrades all three.
+# (upgraded with bits=32 — every pre-v4 cell ran full-precision wires);
+# v4 predates the ``membership`` axis (upgraded with "full" — every
+# pre-v5 cell ran with all shards alive).  ``load`` upgrades all four.
 SCHEMA_V1 = "bench_aggregate/v1"
 SCHEMA_V2 = "bench_aggregate/v2"
 SCHEMA_V3 = "bench_aggregate/v3"
+SCHEMA_V4 = "bench_aggregate/v4"
 
 # Record keys that identify a configuration (the diff/check join key).
+# ``membership`` keys degraded-mesh cells ("full" | "dead=[k,..]"): a
+# masked collective runs a different schedule (survivor-only perm, extra
+# resync broadcast on the ring), so its wall time never joins against —
+# or gets grouped with — a full-membership cell's.
 KEY_FIELDS = (
-    "topology", "comm", "bits", "backend", "polar", "orth", "m", "d", "r",
-    "n_iter"
+    "topology", "comm", "bits", "membership", "backend", "polar", "orth",
+    "m", "d", "r", "n_iter"
 )
 
 DEFAULT_COMMS = ("psum", "gather", "ring")
@@ -145,6 +151,7 @@ def bench_stacked(shapes, backends, polars, orths, *, n_iter: int, reps: int):
                     )
                     rec = {
                         "topology": "stacked", "comm": "-", "bits": 32,
+                        "membership": "full",
                         "backend": backend,
                         "polar": polar, "orth": orth,
                         "m": m, "d": d, "r": r, "n_iter": n_iter,
@@ -216,7 +223,8 @@ def bench_collective(
                             )
                             rec = {
                                 "topology": "collective", "comm": comm,
-                                "bits": cb, "backend": backend,
+                                "bits": cb, "membership": "full",
+                                "backend": backend,
                                 "polar": polar, "orth": orth, "m": n_dev,
                                 "d": d, "r": r,
                                 "n_iter": n_iter,
@@ -285,6 +293,12 @@ def load(path: str) -> dict:
         # ran full-precision fp32 wires.
         for rec in doc.get("records", []):
             rec.setdefault("bits", 32)
+        doc["schema"] = SCHEMA_V4
+    if doc.get("schema") == SCHEMA_V4:
+        # v4 predates the ``membership`` axis: every pre-v5 cell ran with
+        # all shards alive.
+        for rec in doc.get("records", []):
+            rec.setdefault("membership", "full")
         doc["schema"] = SCHEMA
     if doc.get("schema") != SCHEMA:
         raise ValueError(
@@ -303,12 +317,13 @@ def pretty_print(doc: dict) -> None:
         f"# {SCHEMA} | jax {meta.get('jax')} on {meta.get('platform')} "
         f"x{meta.get('device_count')} | {meta.get('timestamp')}"
     )
-    hdr = ("topology", "comm", "bits", "backend", "polar", "orth", "m", "d",
-           "r", "n_iter", "mode", "wall_us", "compile_s")
+    hdr = ("topology", "comm", "bits", "membership", "backend", "polar",
+           "orth", "m", "d", "r", "n_iter", "mode", "wall_us", "compile_s")
     print(",".join(hdr))
     for rec in sorted(doc["records"], key=_key):
         print(
             f"{rec['topology']},{rec['comm']},{rec['bits']},"
+            f"{rec['membership']},"
             f"{rec['backend']},{rec['polar']},{rec['orth']},"
             f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
             f"{rec['mode']},{rec['wall_us']:.1f},{rec['compile_s']:.2f}"
@@ -329,7 +344,7 @@ def diff(old: dict, new: dict) -> None:
             f"({p_old!r} vs {p_new!r}); wall times are not comparable"
         )
     olds = {_key(r): r for r in old["records"]}
-    print("topology,comm,bits,backend,polar,orth,m,d,r,n_iter,"
+    print("topology,comm,bits,membership,backend,polar,orth,m,d,r,n_iter,"
           "old_us,new_us,ratio")
     for rec in sorted(new["records"], key=_key):
         prev = olds.get(_key(rec))
@@ -342,6 +357,7 @@ def diff(old: dict, new: dict) -> None:
         old_us = f"{prev['wall_us']:.1f}" if prev else "-"
         print(
             f"{rec['topology']},{rec['comm']},{rec['bits']},"
+            f"{rec['membership']},"
             f"{rec['backend']},{rec['polar']},{rec['orth']},"
             f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
             f"{old_us},{rec['wall_us']:.1f},{status}"
@@ -378,7 +394,8 @@ def check(
       the same factor is invisible — run ``calibrate=False`` on
       same-machine sweeps to see it.
     * **group verdicts.**  The primary verdict is per *path group*
-      (topology, comm, bits) — the unit a code change actually moves —
+      (topology, comm, bits, membership) — the unit a code change
+      actually moves —
       using the median calibrated ratio of the group's cells (backend /
       polar / orth / shape variants).  A noisy-neighbor episode hits a
       few arbitrary cells; a real path regression moves its whole group.
@@ -388,7 +405,11 @@ def check(
       group populations large enough for a meaningful median on the
       tiny CI sweep.  The sweeps interleave groups (bits/backend/comm
       innermost) so one noise episode cannot hit all of a group's cells
-      back to back.
+      back to back.  Degraded-mesh cells (``membership != "full"``) form
+      their own groups: a masked collective runs a genuinely different
+      schedule, so the gate never reads a full-vs-masked wall-time gap as
+      a regression — the membership-agnosticity contract of the elastic
+      runtime (tests/test_elastic.py).
     * **cell blowups.**  Narrow single-cell regressions are still caught,
       at a loose ``cell_threshold`` (default 5x) and only for cells at or
       above ``cell_floor_us`` in both sweeps — sub-millisecond cells
@@ -424,7 +445,8 @@ def check(
     }
     groups: dict = {}
     for rec, prev, ratio in matched:
-        g = (rec["topology"], rec["comm"], rec.get("bits", 32))
+        g = (rec["topology"], rec["comm"], rec.get("bits", 32),
+             rec.get("membership", "full"))
         groups.setdefault(g, []).append(ratio / norms[rec["topology"]])
     regressions = [
         {"group": g, "cal_ratio": statistics.median(rs), "cells": len(rs)}

@@ -66,8 +66,14 @@ def comm_measured(*, check: bool = False, bits=(32, 8)) -> bool:
     both 32 and 8 are swept, the ring's collective-permute payload at 8
     bits is additionally asserted to be ~1/4 of the fp32 payload (the
     headline wire saving: d*r*8 + 32*r scale bits vs d*r*32).
+
+    A degraded-mesh lane rides along: per wire tier, one ring cell with
+    shard 2 masked dead (``membership=Membership.from_dead(8, (2,))``) is
+    compiled and checked against ``comm_cost(..., membership=mem)`` —
+    m'-1 survivor hops per round plus the one exact f32 resynchronizing
+    broadcast the masked ring appends (see ``repro.comm.ring``).
     """
-    from repro.comm import TOPOLOGIES, comm_cost
+    from repro.comm import TOPOLOGIES, Membership, comm_cost
 
     d, r, n, m = 512, 16, 256, 8
     bits = tuple(bits)
@@ -90,6 +96,15 @@ for topology in {list(TOPOLOGIES)!r}:
             print("CELL", json.dumps({{"topology": topology, "n_iter": n_iter,
                                        "bits": cb,
                                        "measured": {{k: v for k, v in hlo.items() if v}}}}))
+from repro.comm import Membership
+mem = Membership.from_dead({m}, (2,))
+for cb in {list(bits)!r}:
+    fn = jax.jit(lambda s, b=cb: distributed_pca(
+        s, mesh, r, n_iter=2, topology="ring", comm_bits=b, membership=mem))
+    hlo = collective_bytes(fn.lower(samples).compile().as_text())
+    print("CELL", json.dumps({{"topology": "ring", "n_iter": 2, "bits": cb,
+                               "masked": True,
+                               "measured": {{k: v for k, v in hlo.items() if v}}}}))
 """
     env = dict(os.environ)
     src = os.path.join(
@@ -109,7 +124,8 @@ for topology in {list(TOPOLOGIES)!r}:
         for line in out.stdout.splitlines()
         if line.startswith("CELL ")
     ]
-    expected = len(TOPOLOGIES) * len(MEASURE_N_ITERS) * len(bits)
+    # Full-membership cube plus one masked-ring cell per wire tier.
+    expected = len(TOPOLOGIES) * len(MEASURE_N_ITERS) * len(bits) + len(bits)
     if len(cells) != expected:
         # Fail closed: a format drift that yields zero parseable cells must
         # not report "verified".
@@ -120,12 +136,15 @@ for topology in {list(TOPOLOGIES)!r}:
     on_tpu = any(dev.platform == "tpu" for dev in _local_devices())
     ok_all = True
     ring_cp = {}  # bits -> measured collective-permute bytes (n_iter=2)
+    dead_mem = Membership.from_dead(m, (2,))
     for cell in cells:
         topology, n_iter, cb = cell["topology"], cell["n_iter"], cell["bits"]
+        masked = cell.get("masked", False)
         predicted = {
             k: v
             for k, v in comm_cost(
-                topology, m=m, d=d, r=r, n_iter=n_iter, comm_bits=cb
+                topology, m=m, d=d, r=r, n_iter=n_iter, comm_bits=cb,
+                membership=dead_mem if masked else None,
             ).hlo_bytes.items()
             if v
         }
@@ -138,11 +157,12 @@ for topology in {list(TOPOLOGIES)!r}:
         exempt = topology == "psum" and cb == 16 and not on_tpu
         ok = cell["measured"] == predicted
         ok_all &= ok or exempt
-        if topology == "ring" and n_iter == 2:
+        if topology == "ring" and n_iter == 2 and not masked:
             ring_cp[cb] = cell["measured"].get("collective-permute", 0)
+        mask_tag = ",masked=dead2" if masked else ""
         emit(
             f"comm_measured[{topology},d={d},r={r},m={m},"
-            f"n_iter={n_iter},bits={cb}]",
+            f"n_iter={n_iter},bits={cb}{mask_tag}]",
             0.0,
             f"measured={json.dumps(cell['measured'], sort_keys=True)};"
             f"predicted={json.dumps(predicted, sort_keys=True)};"
@@ -150,7 +170,8 @@ for topology in {list(TOPOLOGIES)!r}:
         )
         if check and not ok and not exempt:
             raise AssertionError(
-                f"topology {topology!r} (n_iter={n_iter}, comm_bits={cb}): "
+                f"topology {topology!r} (n_iter={n_iter}, comm_bits={cb}"
+                f"{', masked' if masked else ''}): "
                 f"measured HLO collective bytes {cell['measured']} != "
                 f"model {predicted}"
             )

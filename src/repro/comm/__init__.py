@@ -19,6 +19,10 @@ import time (core/kernels imports are function-level), so it sits below
 ``repro.core`` in the layering.
 """
 
+from repro.comm.membership import (  # noqa: F401
+    Membership,
+    resolve_membership,
+)
 from repro.comm.quantize import (  # noqa: F401
     COMM_BITS,
     COMM_BITS_CHOICES,

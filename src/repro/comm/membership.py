@@ -1,0 +1,143 @@
+"""Jit-static shard membership for elastic (degraded-mesh) collectives.
+
+Production aggregation rounds race preemptions: a shard that dies
+mid-estimation must not kill the whole estimate, because the statistical
+theory degrades gracefully in the machine count (Fan et al., arXiv
+1702.06488).  ``Membership`` is the masking contract every topology
+honors (``repro.core.distributed``, ``repro.comm.ring``):
+
+  * the mask is an **active-shard vector** over the *physical* mesh axis
+    (length m), plus the derived survivor count m' = ``m_active``;
+  * it is **hashable and frozen** — a jit-static value, like
+    ``repro.plan.Plan`` — so masks fold into the traced program as
+    constants: the psum topology multiplies dead contributions away and
+    reweights by m', the gather topology drops dead rows of the gathered
+    stack with static indexing, and the ring builds its permutation over
+    the survivors only (dead hops are *not traced*, so the program
+    genuinely shrinks to m' - 1 hops);
+  * the semantic contract: a masked round over the survivors computes
+    the round a fresh m'-shard job would run on the survivors' data
+    (the parity suite asserts this against the serial oracle restricted
+    to the survivors, within ``PARITY_TOL[comm_bits]``);
+  * ``Membership.full(m)`` (or ``membership=None`` anywhere) is the
+    byte-identical no-op: every masked code path is gated on
+    ``is_full``, so full-membership programs trace exactly as before.
+
+The elastic runtime (``repro.runtime.elastic``) derives memberships from
+``FailureInjector`` / ``StragglerMonitor`` events and re-plans at m';
+this module stays below ``repro.core`` in the layering (jax-only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Tuple
+
+__all__ = ["Membership", "resolve_membership"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Membership:
+    """Active-shard mask over a mesh axis of m physical shards.
+
+    ``active[i]`` is True iff shard i contributes to (and is trusted by)
+    the collectives.  Frozen + tuple-backed, so instances are hashable
+    and usable as jit-static arguments / closure constants.
+    """
+
+    active: Tuple[bool, ...]
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "active", tuple(bool(a) for a in self.active)
+        )
+        if not self.active:
+            raise ValueError("Membership needs at least one shard")
+        if not any(self.active):
+            raise ValueError(
+                "Membership needs at least one active shard (a fully dead "
+                "mesh has no survivors to aggregate over)"
+            )
+
+    # -- derived views -----------------------------------------------------
+
+    @property
+    def m(self) -> int:
+        """Physical axis size (alive or not)."""
+        return len(self.active)
+
+    @property
+    def m_active(self) -> int:
+        """Survivor count m' — the effective machine count."""
+        return sum(self.active)
+
+    @property
+    def is_full(self) -> bool:
+        return all(self.active)
+
+    @property
+    def indices(self) -> Tuple[int, ...]:
+        """Active shard indices in mesh order (static — safe to index with)."""
+        return tuple(i for i, a in enumerate(self.active) if a)
+
+    @property
+    def dead(self) -> Tuple[int, ...]:
+        return tuple(i for i, a in enumerate(self.active) if not a)
+
+    @property
+    def first_active(self) -> int:
+        """The reference shard: the paper's "shard 0" role falls to the
+        first survivor when shard 0 itself is dead."""
+        return self.indices[0]
+
+    # -- constructors / transitions ---------------------------------------
+
+    @classmethod
+    def full(cls, m: int) -> "Membership":
+        return cls(active=(True,) * m)
+
+    @classmethod
+    def from_dead(cls, m: int, dead: Iterable[int]) -> "Membership":
+        dead = frozenset(int(s) for s in dead)
+        bad = [s for s in dead if not 0 <= s < m]
+        if bad:
+            raise ValueError(f"dead shard ids {bad} out of range for m={m}")
+        return cls(active=tuple(i not in dead for i in range(m)))
+
+    def drop(self, *shards: int) -> "Membership":
+        return Membership.from_dead(
+            self.m, frozenset(self.dead) | frozenset(shards)
+        )
+
+    def recover(self, *shards: int) -> "Membership":
+        back = frozenset(int(s) for s in shards)
+        bad = [s for s in back if not 0 <= s < self.m]
+        if bad:
+            raise ValueError(
+                f"recovered shard ids {bad} out of range for m={self.m}"
+            )
+        return Membership.from_dead(self.m, frozenset(self.dead) - back)
+
+
+def resolve_membership(
+    membership: Optional[Membership], m: int
+) -> Membership:
+    """Normalize a ``membership=`` knob against a physical axis size.
+
+    ``None`` means full membership (the byte-identical legacy program);
+    an explicit ``Membership`` must describe exactly the m shards of the
+    axis it masks — a length mismatch is a wiring bug, not a request.
+    """
+    if membership is None:
+        return Membership.full(m)
+    if not isinstance(membership, Membership):
+        raise TypeError(
+            f"membership must be a repro.comm.Membership or None, "
+            f"got {type(membership).__name__}"
+        )
+    if membership.m != m:
+        raise ValueError(
+            f"membership describes {membership.m} shards but the mesh axis "
+            f"has {m}"
+        )
+    return membership

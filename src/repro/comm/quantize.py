@@ -243,14 +243,22 @@ def wire_broadcast(x, axis_name: str, codec: Codec, *, src: int = 0,
 def wire_psum_mean(x, axis_name: str, m: int, codec: Codec, *, key=None):
     """Mean over the axis with the *sum taken at wire precision*.
 
+    ``m`` is the **contributor count**, not necessarily the physical axis
+    size: under a degraded membership (``repro.comm.Membership``) the
+    caller masks dead shards' ``x`` to exact zeros and passes m' — zeros
+    quantize to zero at every tier (``floor(0/qscale + u) == 0`` for
+    u in [0, 1)), so the all-reduce still runs over the full axis while
+    the mean and the int8 headroom are taken over the m' survivors.
+
     Returns ``(mean, residual)`` where ``residual`` is this shard's
     error-feedback state (``None`` at 32 bits).  The int8 tier agrees on a
     shared per-column scale via one f32[r] max-all-reduce, with headroom so
     the summed s8 payloads cannot wrap (see module docstring); it needs
-    ``m <= 126``.  The bf16 tier genuinely sums in bf16 — arithmetic, so
-    no u16 carrier trick applies; XLA's CPU backend float-normalizes it to
-    an f32 all-reduce (TPU sums bf16 natively), which is why the
-    bits-vs-HLO byte check exempts the (psum, 16) cell off-TPU.
+    ``m <= 126`` contributors.  The bf16 tier genuinely sums in bf16 —
+    arithmetic, so no u16 carrier trick applies; XLA's CPU backend
+    float-normalizes it to an f32 all-reduce (TPU sums bf16 natively),
+    which is why the bits-vs-HLO byte check exempts the (psum, 16) cell
+    off-TPU.
     """
     if not codec.lossy:
         return jax.lax.psum(x, axis_name) / m, None
@@ -261,8 +269,8 @@ def wire_psum_mean(x, axis_name: str, m: int, codec: Codec, *, key=None):
         return mean, x - w.astype(jnp.float32)
     if m > 126:
         raise ValueError(
-            f"int8 psum needs m <= 126 for overflow headroom (got m={m}); "
-            "use topology='gather'/'ring' or comm_bits >= 16"
+            f"int8 psum needs m <= 126 contributors for overflow headroom "
+            f"(got m={m}); use topology='gather'/'ring' or comm_bits >= 16"
         )
     colmax = jax.lax.pmax(jnp.max(jnp.abs(x), axis=0), axis_name)
     qscale = jnp.where(colmax > 0, colmax, 1.0) * m / (_INT8_QMAX - m)

@@ -53,6 +53,7 @@ from typing import List, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm.membership import Membership, resolve_membership
 from repro.comm.quantize import (
     from_wire,
     get_codec,
@@ -111,15 +112,18 @@ def ring_rounds(
     orth: str = "qr",
     chunk: int = DEFAULT_RING_CHUNK,
     comm_bits: int = 32,
+    membership: Membership | None = None,
 ) -> jax.Array:
     """``n_iter`` Algorithm-1 rounds over a mesh axis via the ring schedule.
 
     Args:
       v_local: (d, r) local basis on each shard of ``axis_name``.
       ref: optional (d, r) reference; defaults to shard 0's basis via one
-        wire-precision broadcast (the paper's choice).
+        wire-precision broadcast (the paper's choice) — the first
+        *surviving* shard's under a degraded ``membership``.
       n_iter: refinement rounds; each costs (m-1) hop messages of
-        ``quantize.message_bits(d, r, comm_bits)`` bits.
+        ``quantize.message_bits(d, r, comm_bits)`` bits ((m'-1) under a
+        degraded membership).
       polar / orth: round methods, as everywhere (validated up front).
       chunk: rows per circulating chunk; need not divide d.
       comm_bits: wire precision of the circulating chunks (32/16/8, see
@@ -128,13 +132,27 @@ def ring_rounds(
         compute but forward the original chunks, so hop count adds no
         re-quantization error — with the per-round encoding residual
         carried as error-feedback state into the next round's send.
+      membership: jit-static active-shard mask (``repro.comm.Membership``).
+        The ring's permutation is built over the survivors only, so dead
+        hops are *not traced* — a degraded round is m'-1 hops linking the
+        survivors in mesh order, exactly the ring a fresh m'-shard job
+        would run, still O(d·r) working set.  The error-feedback residual
+        is per-call state: rounds inside one call share one membership, so
+        telescoping is preserved; a membership *change* starts a new call
+        with a fresh (zero) residual — the stale residual describes a
+        quantization debt owed to a mesh that no longer exists
+        (``repro.runtime.elastic`` groups rounds accordingly).  After the
+        rounds, one exact f32 broadcast from the first survivor hands the
+        result to the dead shards too (their ring buffers held zeros), so
+        the output is replicated mesh-wide — the basis a recovering shard
+        Procrustes-aligns to when it rejoins.
 
     Returns the (d, r) round output in ``v_local.dtype`` (replicated up to
     the summation-order rounding discussed in the module docstring; lossy
     tiers are replicated exactly as far, since every shard decodes the
     same m payloads).
     """
-    from repro.comm.topology import axis_size
+    from repro.comm.topology import axis_size, broadcast_from
     from repro.core.orthonorm import orthonormalize, resolve_orth
     from repro.core.procrustes import resolve_polar
 
@@ -142,12 +160,15 @@ def ring_rounds(
     resolve_orth(orth)
     codec = get_codec(comm_bits)
     m = axis_size(axis_name)
+    mem = resolve_membership(membership, m)
     base_key = shard_key(axis_name, _RING_SALT) if codec.stochastic else None
     if ref is None:
         bkey = (
             jax.random.fold_in(base_key, 0) if codec.stochastic else None
         )
-        ref = wire_broadcast(v_local, axis_name, codec, src=0, key=bkey)
+        ref = wire_broadcast(
+            v_local, axis_name, codec, src=mem.first_active, key=bkey
+        )
     out = ref
     err = jnp.zeros(v_local.shape, jnp.float32) if codec.lossy else None
     for k in range(max(n_iter, 1)):
@@ -155,10 +176,16 @@ def ring_rounds(
             jax.random.fold_in(base_key, k + 1) if codec.stochastic else None
         )
         vbar, err = _ring_round(
-            v_local, out, axis_name=axis_name, m=m, polar=polar, chunk=chunk,
-            codec=codec, err=err, key=rkey,
+            v_local, out, axis_name=axis_name, membership=mem, polar=polar,
+            chunk=chunk, codec=codec, err=err, key=rkey,
         )
         out = orthonormalize(vbar, orth=orth).astype(v_local.dtype)
+    if not mem.is_full:
+        # Dead shards were never ppermute targets, so their buffers (and
+        # hence their `out`) are garbage; replicate the survivors' answer
+        # mesh-wide from the first survivor (one exact f32 d·r all-reduce,
+        # priced by the cost model's degraded-ring sync term).
+        out = broadcast_from(out, axis_name, src=mem.first_active)
     return out
 
 
@@ -167,14 +194,14 @@ def _ring_round(
     ref: jax.Array,
     *,
     axis_name: str,
-    m: int,
+    membership: Membership,
     polar: str,
     chunk: int,
     codec,
     err,
     key,
 ):
-    """One round: circulate the bases m-1 hops, aligning each arrival.
+    """One round: circulate the bases m'-1 hops, aligning each arrival.
 
     Returns ``(vbar, err)`` — the pre-orthonormalization average and the
     updated error-feedback residual (``None`` at 32 bits).  The circulating
@@ -182,11 +209,20 @@ def _ring_round(
     a bf16 hop forwards bf16, never a silently-upcast f32 copy, and the
     int8 tier ppermutes its f32[r] column scale alongside the payload as
     one extra small transfer per hop (the 32·r term in the cost model).
+
+    The permutation links the *survivors* in mesh order — at full
+    membership exactly the classic ``(i, (i+1) % m)`` ring.  Dead shards
+    appear in no (src, dst) pair, so they neither send nor receive
+    (``ppermute`` leaves non-targets holding zeros); their local compute
+    runs on those zeros and is discarded by the post-round sync in
+    ``ring_rounds``.
     """
     d = v_local.shape[0]
     spans = _chunk_spans(d, chunk)
     ref_c = [ref[s:e].astype(jnp.float32) for s, e in spans]
-    perm = [(i, (i + 1) % m) for i in range(m)]
+    idxs = membership.indices
+    k = membership.m_active
+    perm = [(idxs[i], idxs[(i + 1) % k]) for i in range(k)]
 
     if codec.lossy:
         send = v_local.astype(jnp.float32) + err
@@ -202,10 +238,10 @@ def _ring_round(
             return chunks
         return [codec.decode(from_wire(c, codec), sc) for c in chunks]
 
-    # Own basis: consume the *decoded* payload, so all m shards average the
-    # identical m wire-precision bases (replication is preserved).
+    # Own basis: consume the *decoded* payload, so all m' shards average the
+    # identical m' wire-precision bases (replication is preserved).
     acc_c = _aligned_contribution(dec(buf_c, scale), ref_c, polar=polar)
-    for _ in range(m - 1):
+    for _ in range(k - 1):
         # Receive the left neighbor's basis chunk by chunk; the Gram of
         # chunk c can start as soon as chunk c lands, overlapping the
         # remaining transfers (and the next hop overlaps this hop's apply).
@@ -215,4 +251,4 @@ def _ring_round(
         contrib = _aligned_contribution(dec(buf_c, scale), ref_c, polar=polar)
         acc_c = [a + c for a, c in zip(acc_c, contrib)]
     vbar = acc_c[0] if len(acc_c) == 1 else jnp.concatenate(acc_c, axis=0)
-    return vbar / m, err
+    return vbar / k, err

@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import axis_size as _compat_axis_size
+from repro.comm.membership import Membership, resolve_membership
 from repro.comm.quantize import message_bits, resolve_comm_bits
 
 __all__ = [
@@ -167,6 +168,7 @@ def comm_cost(
     n_iter: int = 1,
     ref_broadcast: bool = True,
     comm_bits=32,
+    membership: Membership | None = None,
 ) -> CommCost:
     """Bits a topology moves for ``n_iter`` refinement rounds.
 
@@ -179,9 +181,26 @@ def comm_cost(
     the wire (the int8 tier's f32[r] scale collectives included); the
     int8 psum rounds spend their 32·r overhead on the shared-scale
     max-all-reduce instead of a per-message scale, same total.
+
+    ``membership`` prices the degraded-mesh program *as compiled* — the
+    physical wire, what ``hlo_analysis.collective_bytes`` measures:
+
+      * psum / gather are unchanged: the all-reduce / all-gather still
+        runs over the full physical axis (dead shards contribute masked
+        zeros / dropped rows), so per-device operand bytes do not move;
+      * the ring genuinely shrinks — its permutation is built over the
+        survivors only, so a round is n·(m'-1) hop messages — and adds
+        one exact f32 d·r sync broadcast per estimation so dead shards
+        leave holding the survivors' basis (the rejoin reference,
+        ``repro.comm.ring``).
+
+    This is deliberately distinct from *re-planning* at m', which prices
+    the fresh m'-shard job (``plan_aggregation(m=m')``) the masked round
+    is contractually equivalent to — see ``repro.runtime.elastic``.
     """
     t = resolve_topology(topology)
     bits_per = resolve_comm_bits(comm_bits)
+    mem = resolve_membership(membership, m)
     n = max(n_iter, 1)
     basis = d * r
     msg = message_bits(d, r, bits_per)
@@ -196,10 +215,18 @@ def comm_cost(
         return CommCost(
             "gather", bits_per, m * basis, m * msg, {"all-gather": msg}
         )
-    hop_bits = n * (m - 1) * msg
+    hops = mem.m_active - 1
+    hop_bits = n * hops * msg
+    # Degraded ring only: one exact f32 broadcast from the first survivor
+    # after the rounds, so every physical shard (the dead ones included)
+    # holds the survivors' answer — the basis a recovering shard aligns to.
+    sync_w = 0 if mem.is_full else basis
+    sync_b = sync_w * 32
     return CommCost(
-        "ring", bits_per, bcast_w + n * (m - 1) * basis, bcast_b + hop_bits,
-        {"all-reduce": bcast_b, "collective-permute": hop_bits},
+        "ring", bits_per,
+        bcast_w + n * hops * basis + sync_w,
+        bcast_b + hop_bits + sync_b,
+        {"all-reduce": bcast_b + sync_b, "collective-permute": hop_bits},
     )
 
 

@@ -57,6 +57,7 @@ from repro.comm import (
     wire_broadcast,
     wire_psum_mean,
 )
+from repro.comm.membership import Membership, resolve_membership
 from repro.comm.quantize import from_wire, shard_key, to_wire
 from repro.compat import shard_map
 from repro.core import procrustes
@@ -104,6 +105,7 @@ def procrustes_average_collective(
     ring_chunk: int | None = None,
     comm_bits=None,
     plan=None,
+    membership: Membership | None = None,
 ) -> jax.Array:
     """Algorithm 1 (n_iter=1) / Algorithm 2 (n_iter>1) across a mesh axis.
 
@@ -140,17 +142,29 @@ def procrustes_average_collective(
         (backend x topology x polar x orth x comm_bits) cube for this
         (m, d, r) and decides every knob left free (concrete knob
         arguments are pins); a ``repro.plan.Plan`` — used verbatim.
+      membership: jit-static active-shard mask (``repro.comm.Membership``;
+        ``None`` = all alive, byte-identical to before).  Every topology
+        honors it: psum masks dead contributions to exact zeros and
+        divides by m', gather drops dead rows of the stack with static
+        indexing before the rounds, the ring links the survivors only
+        (m'-1 traced hops) and syncs its answer mesh-wide afterwards.
+        The reference default becomes the *first survivor's* basis.  The
+        contract: the masked round over the survivors is the round a
+        fresh m'-shard job would run (see ``repro.comm.membership``).
+        Planning paths (``plan="auto"`` / legacy provenance) price the
+        collective at m'.
 
     Returns the replicated (d, r) Procrustes-fixed average.
     """
     from repro.plan.planner import resolve_plan
 
     d, r = v_local.shape
+    mem = resolve_membership(membership, axis_size(axis_name))
     pl = resolve_plan(
-        plan, m=axis_size(axis_name), d=d, r=r, n_iter=n_iter,
+        plan, m=mem.m, d=d, r=r, n_iter=n_iter,
         backend=backend, topology=topology, polar=polar, orth=orth,
         ring_chunk=ring_chunk, comm_bits=comm_bits,
-        ref_broadcast=(ref is None),
+        ref_broadcast=(ref is None), membership=mem,
     )
     backend, topo, polar, orth = pl.backend, pl.topology, pl.polar, pl.orth
     procrustes.resolve_polar(polar)
@@ -180,6 +194,13 @@ def procrustes_average_collective(
                 vs = codec.decode(g, gs[:, None, :])
         else:
             vs = jax.lax.all_gather(v_local, axis_name)  # (m, d, r)
+        if not mem.is_full:
+            # Static survivor indexing: the all-gather still runs over the
+            # full axis (dead rows cost the same wire either way), but the
+            # stacked rounds see exactly the (m', d, r) stack a fresh
+            # m'-shard job would gather — row 0 is the first survivor, so
+            # the default reference follows the membership contract.
+            vs = vs[jnp.asarray(mem.indices)]
         return refinement_rounds(
             vs, ref, n_iter=n_iter, backend=backend, polar=polar, orth=orth
         )
@@ -187,15 +208,25 @@ def procrustes_average_collective(
         return ring_rounds(
             v_local, ref, axis_name=axis_name, n_iter=n_iter,
             polar=polar, orth=orth, chunk=pl.ring_chunk,
-            comm_bits=pl.comm_bits,
+            comm_bits=pl.comm_bits, membership=mem,
         )
-    m = axis_size(axis_name)
+    m = mem.m_active
     base_key = (
         shard_key(axis_name, _PSUM_SALT) if codec.stochastic else None
     )
     if ref is None:
         bkey = jax.random.fold_in(base_key, 0) if codec.stochastic else None
-        ref = wire_broadcast(v_local, axis_name, codec, src=0, key=bkey)
+        ref = wire_broadcast(
+            v_local, axis_name, codec, src=mem.first_active, key=bkey
+        )
+    alive = None
+    if not mem.is_full:
+        # Traced per-shard gate folded from the static mask: dead shards
+        # contribute exact zeros (which quantize to zero at every wire
+        # tier, and add nothing to the int8 colmax pmax), so the
+        # all-reduce still runs over the full axis while the mean and the
+        # overflow headroom are taken over the m' survivors.
+        alive = jnp.asarray(mem.active)[jax.lax.axis_index(axis_name)]
     err = jnp.zeros(v_local.shape, jnp.float32) if codec.lossy else None
     for k in range(max(n_iter, 1)):
         aligned = _align_local(v_local, ref, backend=backend, polar=polar)
@@ -208,10 +239,15 @@ def procrustes_average_collective(
                 if codec.stochastic else None
             )
             send = aligned.astype(jnp.float32) + err
+            if alive is not None:
+                send = jnp.where(alive, send, jnp.zeros_like(send))
             vbar, err = wire_psum_mean(send, axis_name, m, codec, key=rkey)
             vbar = vbar.astype(v_local.dtype)
         else:
-            vbar = jax.lax.psum(aligned.astype(v_local.dtype), axis_name) / m
+            contrib = aligned.astype(v_local.dtype)
+            if alive is not None:
+                contrib = jnp.where(alive, contrib, jnp.zeros_like(contrib))
+            vbar = jax.lax.psum(contrib, axis_name) / m
         ref = orthonormalize(vbar, orth=orth)
     return ref
 
@@ -253,6 +289,7 @@ def distributed_pca(
     topology: str | None = None,
     comm_bits=None,
     plan=None,
+    membership: Membership | None = None,
 ) -> jax.Array:
     """End-to-end one-shot distributed PCA on a mesh.
 
@@ -268,14 +305,17 @@ def distributed_pca(
     planner (``repro.plan``): the plan is resolved once here at the
     driver level — so a planned ``backend`` also routes the shard-local
     covariance stage — and passed to the collective verbatim.
-    Returns the (d, r) estimate.
+    ``membership`` masks dead shards out of the aggregation (the
+    collective output stays mesh-replicated, so the returned row is valid
+    whichever shards died).  Returns the (d, r) estimate.
     """
     from repro.plan.planner import resolve_plan
 
+    mem = resolve_membership(membership, mesh.shape[data_axis])
     pl = resolve_plan(
-        plan, m=mesh.shape[data_axis], d=samples.shape[-1], r=r,
+        plan, m=mem.m, d=samples.shape[-1], r=r,
         n_iter=n_iter, backend=backend, topology=topology,
-        polar=polar, orth=orth, comm_bits=comm_bits,
+        polar=polar, orth=orth, comm_bits=comm_bits, membership=mem,
     )
 
     def shard_fn(x_shard: jax.Array) -> jax.Array:
@@ -283,7 +323,7 @@ def distributed_pca(
             x_shard, r, solver=solver, iters=iters, backend=pl.backend
         )
         out = procrustes_average_collective(
-            v, axis_name=data_axis, n_iter=n_iter, plan=pl,
+            v, axis_name=data_axis, n_iter=n_iter, plan=pl, membership=mem,
         )
         return out[None]  # keep a sharded leading axis; identical on every shard
 
@@ -313,20 +353,23 @@ def distributed_pca_from_covs(
     topology: str | None = None,
     comm_bits=None,
     plan=None,
+    membership: Membership | None = None,
 ) -> jax.Array:
     """Same as ``distributed_pca`` but from pre-formed local matrices (m, d, d).
 
     This is the paper's abstract setting (each machine holds a noisy X̂ⁱ),
     useful when the local matrices are not covariances (e.g. quadratic
-    sensing's D_N, HOPE proximity matrices).  ``plan`` / ``comm_bits`` as
-    in ``distributed_pca`` (resolved once at the driver level).
+    sensing's D_N, HOPE proximity matrices).  ``plan`` / ``comm_bits`` /
+    ``membership`` as in ``distributed_pca`` (resolved once at the driver
+    level).
     """
     from repro.plan.planner import resolve_plan
 
+    mem = resolve_membership(membership, mesh.shape[data_axis])
     pl = resolve_plan(
-        plan, m=mesh.shape[data_axis], d=covs.shape[-1], r=r,
+        plan, m=mem.m, d=covs.shape[-1], r=r,
         n_iter=n_iter, backend=backend, topology=topology,
-        polar=polar, orth=orth, comm_bits=comm_bits,
+        polar=polar, orth=orth, comm_bits=comm_bits, membership=mem,
     )
 
     def shard_fn(cov_shard: jax.Array) -> jax.Array:
@@ -334,7 +377,7 @@ def distributed_pca_from_covs(
         cov = jnp.mean(cov_shard, axis=0)
         v, _ = local_eigenbasis(cov, r, method=solver, iters=iters)
         out = procrustes_average_collective(
-            v, axis_name=data_axis, n_iter=n_iter, plan=pl,
+            v, axis_name=data_axis, n_iter=n_iter, plan=pl, membership=mem,
         )
         return out[None]
 

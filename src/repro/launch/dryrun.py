@@ -316,7 +316,7 @@ def dryrun_paper_pca(
     backend: Optional[str] = None, polar: Optional[str] = None,
     orth: Optional[str] = None, topology: Optional[str] = None,
     comm_bits=None, plan=None, explain: bool = False, calibration=None,
-    plan_device: Optional[str] = None,
+    plan_device: Optional[str] = None, drop_shards: Optional[str] = None,
 ):
     """Dry-run the paper's own workload (distributed PCA, Algorithm 2).
 
@@ -342,9 +342,15 @@ def dryrun_paper_pca(
     well-defined XLA cost analysis (planning pallas cells on a non-TPU
     host lowers them in interpret mode, whose ``pallas_call`` is opaque
     to ``cost_analysis()`` — DESIGN.md §7).
+
+    ``drop_shards`` ("2,5") lowers the *degraded-mesh* program: the
+    listed data-axis shards are masked dead (``repro.comm.Membership``),
+    the planner prices the survivor count, and the cost-model prediction
+    carries the masked wire (the ring genuinely compiles fewer hops —
+    the measured HLO breakdown shows it next to the prediction).
     """
     from repro import plan as planlib
-    from repro.comm import comm_cost
+    from repro.comm import Membership, comm_cost
     from repro.configs.paper_pca import CONFIG as pcfg
     from repro.core.distributed import distributed_pca
 
@@ -353,11 +359,16 @@ def dryrun_paper_pca(
     n_data = mesh.shape["data"] * (mesh.shape.get("pod", 1))
     # The aggregation collective runs over the "data" axis only.
     m_agg = mesh.shape["data"]
+    mem = None
+    if drop_shards:
+        mem = Membership.from_dead(
+            m_agg, (int(s) for s in drop_shards.split(",") if s.strip())
+        )
     pl = planlib.resolve_plan(
         plan, m=m_agg, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter,
         backend=backend, topology=topology, polar=polar, orth=orth,
         comm_bits=comm_bits, calibration=calibration,
-        device_kind=plan_device,
+        device_kind=plan_device, membership=mem,
     )
     if explain:
         _, table = planlib.explain(
@@ -369,7 +380,7 @@ def dryrun_paper_pca(
         print(table)
     topo = pl.topology
     cost = comm_cost(topo, m=m_agg, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter,
-                     comm_bits=pl.comm_bits)
+                     comm_bits=pl.comm_bits, membership=mem)
     samples_like = jax.ShapeDtypeStruct(
         (n_data * pcfg.n_per_shard, pcfg.d), jnp.float32
     )
@@ -384,6 +395,8 @@ def dryrun_paper_pca(
         "topology": topo,
         "comm_bits": pl.comm_bits,
         "plan_source": pl.source,
+        "membership": "full" if mem is None else f"dead={list(mem.dead)}",
+        "m_active": m_agg if mem is None else mem.m_active,
         "predicted_collective_words": cost.words,
         "predicted_collective_bits": cost.bits,
         # Wire bytes at the plan's comm_bits tier; directly comparable to
@@ -399,7 +412,7 @@ def dryrun_paper_pca(
         return distributed_pca(
             samples, mesh, pcfg.r,
             n_iter=pcfg.n_iter, solver=pcfg.solver, iters=pcfg.solver_iters,
-            plan=pl,
+            plan=pl, membership=mem,
         )
 
     lowered = jax.jit(job).lower(samples_like)
@@ -478,6 +491,12 @@ def main():
                          "lower interpret-mode/opaque off-TPU).  Use "
                          "'tpu' to plan for the v5e target the roofline "
                          "prices")
+    ap.add_argument("--drop-shards", default=None, metavar="K[,K..]",
+                    help="lower the degraded-mesh --paper-pca program "
+                         "with these data-axis shards masked dead "
+                         "(repro.comm.Membership); the planner prices "
+                         "the survivors and the record carries the "
+                         "masked-wire prediction next to measured HLO")
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--device-count", type=int, default=512,
                     help="reduced placeholder device count for CI smoke")
@@ -552,7 +571,8 @@ def main():
                                        comm_bits=args.comm_bits,
                                        plan="auto" if args.plan == "auto" else None,
                                        explain=args.explain, calibration=cal,
-                                       plan_device=args.plan_device)
+                                       plan_device=args.plan_device,
+                                       drop_shards=args.drop_shards)
             else:
                 rec = dryrun_cell(
                     arch, shape, multi_pod=mp, eigen=args.eigen,

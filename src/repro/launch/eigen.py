@@ -61,6 +61,7 @@ def run(
     plan=None,
     explain: bool = False,
     calibration=None,
+    fail_at: str | None = None,
 ):
     from repro import plan as planlib
 
@@ -87,10 +88,29 @@ def run(
     v1 = u[:, :r]
     samples = syn.sample_gaussian(k2, factor, m * n_per_shard)
 
+    report = None
     t0 = time.perf_counter()
-    v_dist = distributed_pca(
-        samples, mesh, r, n_iter=n_iter, solver=solver, iters=iters, plan=pl,
-    )
+    if fail_at:
+        # Elastic lane: a "shard:round,shard:round" kill schedule runs the
+        # same estimation through repro.runtime.elastic — dead shards are
+        # masked out of the collectives round by round, each membership
+        # change re-plans at the survivor count.
+        from repro.runtime.elastic import elastic_pca
+        from repro.runtime.fault import FailureInjector
+
+        injector = FailureInjector(
+            fail_at=FailureInjector.parse_fail_spec(fail_at)
+        )
+        report = elastic_pca(
+            samples, mesh, r, n_iter=n_iter, solver=solver, iters=iters,
+            plan=pl, injector=injector, calibration=calibration,
+        )
+        v_dist = report.basis
+    else:
+        v_dist = distributed_pca(
+            samples, mesh, r, n_iter=n_iter, solver=solver, iters=iters,
+            plan=pl,
+        )
     v_dist.block_until_ready()
     t_dist = time.perf_counter() - t0
 
@@ -119,6 +139,15 @@ def run(
         "dist_local0": float(dist_2(vs[0], v1)),
         "wall_s": t_dist,
     }
+    if report is not None:
+        stats["replans"] = report.replans
+        stats["final_m_active"] = report.final_membership.m_active
+        stats["events"] = [
+            f"round {e.round_index}: {e.reason} "
+            f"(m'={e.membership.m_active}, dead={list(e.membership.dead)}, "
+            f"plan={e.plan.topology}/{e.plan.comm_bits})"
+            for e in report.events
+        ]
     return v_dist, stats
 
 
@@ -181,6 +210,12 @@ def main():
                          "bench_aggregate sweep (e.g. BENCH_aggregate.json); "
                          "only consulted when the planner runs, i.e. with "
                          "--plan auto (or --polar/--orth auto)")
+    ap.add_argument("--fail-at", default=None, metavar="SHARD:ROUND[,..]",
+                    help="elastic fault injection: kill shard k before "
+                         "refinement round t (e.g. '2:1', or '2:1,5:3'); "
+                         "the run completes over the survivors, re-planning "
+                         "the collective at the reduced shard count "
+                         "(repro.runtime.elastic)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
     plan = "auto" if args.plan == "auto" else None
@@ -192,6 +227,7 @@ def main():
         solver=args.solver, backend=args.backend, polar=args.polar,
         orth=args.orth, topology=args.topology, comm_bits=args.comm_bits,
         plan=plan, explain=args.explain, calibration=cal,
+        fail_at=args.fail_at,
     )
     for k, v in stats.items():
         print(f"{k}: {v}")

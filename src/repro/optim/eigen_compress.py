@@ -58,6 +58,13 @@ class EigenCompressConfig:
     # per-round error feedback inside the collective, independent of the
     # gradient-level `error_feedback` below.
     comm_bits: Any = 32
+    # Active-shard mask of the refresh collective (repro.comm.Membership;
+    # None = all alive).  Under a degraded mesh the refresh averages the
+    # survivors' bases only — a dead DP shard neither pollutes the shared
+    # basis nor blocks the refresh — and a shard that comes back simply
+    # re-aligns to `prev_basis` like everyone else (the collective's
+    # `ref` machinery).  The config stays hashable: Membership is frozen.
+    membership: Optional[Any] = None
     error_feedback: bool = True
     bf16_psum: bool = False  # bf16 all-reduce for UNcompressed leaves
 
@@ -124,10 +131,12 @@ def refresh_basis(
         v_prev = procrustes_average_collective(
             v_loc, axis_name=axis_name, n_iter=cfg.n_iter, ref=prev,
             topology=cfg.topology, comm_bits=cfg.comm_bits, plan=cfg.plan,
+            membership=cfg.membership,
         )
         v_new = procrustes_average_collective(
             v_loc, axis_name=axis_name, n_iter=cfg.n_iter,
             topology=cfg.topology, comm_bits=cfg.comm_bits, plan=cfg.plan,
+            membership=cfg.membership,
         )
         return jnp.where(initialized, v_prev, v_new)
 

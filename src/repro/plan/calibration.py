@@ -19,7 +19,7 @@ than poisoning the model.  Wall-time **minimums** are used throughout
 for the same reason the §6 perf gate uses them: contention only ever
 inflates a wall time.
 
-Format: the standard ``bench_aggregate/v1..v4`` files written by
+Format: the standard ``bench_aggregate/v1..v5`` files written by
 ``benchmarks/bench_aggregate.py`` (``{"schema": ..., "meta":
 {"platform": ...}, "records": [...]}``); no planner-specific artifact is
 needed.

@@ -55,6 +55,7 @@ import dataclasses
 import math
 from typing import List, Optional, Sequence, Tuple, Union
 
+from repro.comm.membership import Membership, resolve_membership
 from repro.comm.quantize import COMM_BITS, COMM_BITS_CHOICES, resolve_comm_bits
 from repro.comm.topology import TOPOLOGIES, TOPOLOGY_CHOICES, comm_cost
 from repro.core.orthonorm import ORTH_METHODS
@@ -532,6 +533,7 @@ def resolve_plan(
     context: str = "collective",
     device_kind: Optional[str] = None,
     calibration: Optional[Calibration] = None,
+    membership: Optional[Membership] = None,
 ) -> Plan:
     """The single resolution funnel every aggregation entry point calls.
 
@@ -540,6 +542,14 @@ def resolve_plan(
     defaults), so existing callers see byte-identical behavior;
     ``plan="auto"`` runs the planner over the free axes with concrete
     knob values as pins; a ``Plan`` instance is used verbatim.
+
+    ``membership`` (``repro.comm.Membership``) is the degraded-mesh view:
+    *planning* paths (``plan="auto"`` and the legacy "auto"-knob
+    sub-case) score the cube at the survivor count m' — the fresh
+    m'-shard job the masked round is contractually equivalent to, which
+    also re-checks the int8-psum overflow headroom at m' — while the
+    legacy path's provenance fields price the *physical wire* via
+    ``comm_cost(..., membership=)`` (what compiled HLO measures).
     """
     from repro.comm.topology import resolve_topology
     from repro.comm.ring import DEFAULT_RING_CHUNK
@@ -547,6 +557,8 @@ def resolve_plan(
 
     if isinstance(plan, Plan):
         return plan
+    mem = resolve_membership(membership, m)
+    m_eff = mem.m_active
     if plan is None:
         # Legacy defaults: an unspecified backend is the documented
         # "xla" default; "auto" resolves by the on-TPU rule as always.
@@ -563,7 +575,7 @@ def resolve_plan(
             # resolved — including the legacy ring chunk, so only the
             # free knob differs from a plain plan=None resolution.
             return plan_aggregation(
-                m=m, d=d, r=r, n_iter=n_iter, device_kind=device_kind,
+                m=m_eff, d=d, r=r, n_iter=n_iter, device_kind=device_kind,
                 backend=b, topology=t if context == "collective" else None,
                 polar=p, orth=o,
                 ring_chunk=ring_chunk or DEFAULT_RING_CHUNK,
@@ -574,7 +586,8 @@ def resolve_plan(
         cb = resolve_comm_bits(comm_bits)
         if context == "collective":
             cost = comm_cost(t, m=m, d=d, r=r, n_iter=max(n_iter, 1),
-                             ref_broadcast=ref_broadcast, comm_bits=cb)
+                             ref_broadcast=ref_broadcast, comm_bits=cb,
+                             membership=mem)
             cost_words, cost_bits = cost.words, cost.bits
         else:
             cost_words, cost_bits = 0, 0
@@ -586,7 +599,7 @@ def resolve_plan(
         )
     if plan == "auto":
         return plan_aggregation(
-            m=m, d=d, r=r, n_iter=n_iter, device_kind=device_kind,
+            m=m_eff, d=d, r=r, n_iter=n_iter, device_kind=device_kind,
             backend=backend, topology=topology, polar=polar, orth=orth,
             ring_chunk=ring_chunk, comm_bits=comm_bits,
             ref_broadcast=ref_broadcast,

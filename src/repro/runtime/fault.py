@@ -20,8 +20,9 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import random
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 log = logging.getLogger("repro.fault")
 
@@ -32,10 +33,26 @@ class SimulatedPreemption(RuntimeError):
 
 @dataclasses.dataclass
 class FailureInjector:
-    """Deterministically raise at chosen steps (integration tests)."""
+    """Deterministic fault schedule for tests, at two granularities.
+
+    *Step-level* (the original contract, used by ``launch.train``):
+    ``fail_at_steps`` + ``check(step)`` raise ``SimulatedPreemption`` at
+    chosen steps, once each by default.
+
+    *Collective-level* (the elastic aggregation runtime): ``fail_at`` /
+    ``recover_at`` are (shard, round) event pairs — "shard k dies before
+    round t" / "shard k rejoins before round t" — that the elastic
+    runner (``repro.runtime.elastic``) folds into a per-round
+    ``Membership`` via ``membership_at``.  Nothing raises on this path:
+    a dead shard is masked out of the collectives, not crashed, which is
+    exactly how a preempted host looks to the survivors.
+    """
 
     fail_at_steps: tuple = ()
     fail_once: bool = True
+    # Collective-level schedule: (shard, round) pairs.
+    fail_at: Tuple[Tuple[int, int], ...] = ()
+    recover_at: Tuple[Tuple[int, int], ...] = ()
     _fired: set = dataclasses.field(default_factory=set)
 
     def check(self, step: int):
@@ -45,25 +62,87 @@ class FailureInjector:
             self._fired.add(step)
             raise SimulatedPreemption(f"injected failure at step {step}")
 
+    # -- collective-level schedule ----------------------------------------
+
+    @staticmethod
+    def parse_fail_spec(spec: str) -> Tuple[Tuple[int, int], ...]:
+        """Parse the CLIs' ``--fail-at "k:t,k:t"`` spelling (shard:round)."""
+        pairs = []
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            try:
+                shard, rnd = part.split(":")
+                pairs.append((int(shard), int(rnd)))
+            except ValueError:
+                raise ValueError(
+                    f"bad --fail-at entry {part!r}: expected shard:round "
+                    "(e.g. '2:1' = shard 2 dies before round 1)"
+                ) from None
+        return tuple(pairs)
+
+    def dead_shards(self, round_index: int) -> frozenset:
+        """Shards dead *entering* ``round_index``.
+
+        Events at round t take effect for round t itself; a recovery at
+        the same (shard, round) as a kill wins (sorted after it), so the
+        schedule composes left-to-right in time.
+        """
+        events = sorted(
+            [(t, 0, s) for s, t in self.fail_at]
+            + [(t, 1, s) for s, t in self.recover_at]
+        )
+        dead = set()
+        for t, kind, s in events:
+            if t > round_index:
+                break
+            (dead.discard if kind else dead.add)(s)
+        return frozenset(dead)
+
+    def membership_at(self, round_index: int, m: int):
+        """The ``Membership`` mask in force for ``round_index`` on an
+        m-shard axis (``repro.comm.Membership.from_dead`` validates the
+        shard ids)."""
+        from repro.comm.membership import Membership
+
+        return Membership.from_dead(m, self.dead_shards(round_index))
+
 
 def with_retries(
     fn: Callable,
     *,
     max_retries: int = 3,
     backoff_s: float = 0.1,
+    max_backoff_s: float = 30.0,
+    jitter: float = 0.25,
     retryable=(SimulatedPreemption,),
+    sleep: Callable[[float], None] = time.sleep,
+    rng: Callable[[], float] = random.random,
 ):
-    """Retry transient failures with linear backoff; re-raise after budget."""
+    """Retry transient failures with exponential backoff + jitter.
+
+    Attempt k sleeps ``backoff_s * 2**k`` (capped at ``max_backoff_s``),
+    stretched by up to ``jitter`` fractionally so a fleet of workers
+    retrying the same outage decorrelates instead of thundering back in
+    lockstep.  Re-raises once the budget is spent.  ``sleep`` / ``rng``
+    are injectable for deterministic tests (fake clock).
+    """
 
     def wrapped(*args, **kwargs):
         for attempt in range(max_retries + 1):
             try:
                 return fn(*args, **kwargs)
-            except retryable as e:  # pragma: no cover - timing dependent
+            except retryable as e:
                 if attempt == max_retries:
                     raise
-                log.warning("transient failure (%s); retry %d", e, attempt + 1)
-                time.sleep(backoff_s * (attempt + 1))
+                delay = min(backoff_s * (2.0 ** attempt), max_backoff_s)
+                delay *= 1.0 + jitter * rng()
+                log.warning(
+                    "transient failure (%s); retry %d in %.3fs",
+                    e, attempt + 1, delay,
+                )
+                sleep(delay)
 
     return wrapped
 

@@ -29,6 +29,7 @@ class StragglerMonitor:
 
     _mean: float = 0.0
     _var: float = 0.0
+    _m2: float = 0.0
     _n: int = 0
     _slow_run: int = 0
     escalations: int = 0
@@ -37,7 +38,17 @@ class StragglerMonitor:
         """Record one step duration. Returns True if the step was slow."""
         self._n += 1
         if self._n <= self.warmup:
-            self._mean = dt if self._n == 1 else (self._mean + dt) / 2
+            # Welford running mean/variance over the warmup window (the
+            # old `(mean + dt) / 2` recurrence was an exponentially
+            # tilted average, not a mean — it weighted the latest warmup
+            # step 2^(n-1) times the first).
+            delta = dt - self._mean
+            self._mean += delta / self._n
+            self._m2 += delta * (dt - self._mean)
+            if self._n == self.warmup:
+                # Seed the EMA variance from the warmup sample so the
+                # first post-warmup sigma reflects observed spread.
+                self._var = self._m2 / self.warmup
             return False
         delta = dt - self._mean
         self._mean += self.alpha * delta

@@ -32,6 +32,145 @@ def test_with_retries_recovers():
     assert calls["n"] == 3
 
 
+def test_with_retries_exponential_backoff_fake_clock():
+    """Attempt k sleeps backoff_s * 2**k, stretched by the jitter draw —
+    checked against an injected clock, no wall time spent."""
+    sleeps = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 4:
+            raise SimulatedPreemption("flake")
+        return "ok"
+
+    out = with_retries(
+        flaky, max_retries=3, backoff_s=1.0, jitter=0.5,
+        sleep=sleeps.append, rng=lambda: 1.0,
+    )()
+    assert out == "ok"
+    assert sleeps == [1.5, 3.0, 6.0]  # 1*2^k * (1 + 0.5)
+
+
+def test_with_retries_caps_backoff():
+    sleeps = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 4:
+            raise SimulatedPreemption("flake")
+        return "ok"
+
+    with_retries(
+        flaky, max_retries=3, backoff_s=1.0, max_backoff_s=2.0, jitter=0.0,
+        sleep=sleeps.append, rng=lambda: 0.0,
+    )()
+    assert sleeps == [1.0, 2.0, 2.0]  # min(2^k, cap), no jitter
+
+
+def test_with_retries_reraises_after_budget():
+    sleeps = []
+
+    def always():
+        raise SimulatedPreemption("down for good")
+
+    with pytest.raises(SimulatedPreemption):
+        with_retries(
+            always, max_retries=2, backoff_s=1.0, jitter=0.0,
+            sleep=sleeps.append, rng=lambda: 0.0,
+        )()
+    # Two sleeps, then the third failure re-raises without sleeping.
+    assert sleeps == [1.0, 2.0]
+
+
+def test_with_retries_does_not_catch_unretryable():
+    def boom():
+        raise ValueError("logic bug, not a flake")
+
+    with pytest.raises(ValueError):
+        with_retries(boom, sleep=lambda s: None)()
+
+
+def test_straggler_warmup_mean_is_arithmetic():
+    """Warmup uses a Welford running mean: [1, 2, 3] averages to exactly
+    2.0.  (The old `(mean + dt) / 2` recurrence gave 2.25 — the latest
+    step weighted 2^(n-1) times the first.)"""
+    mon = StragglerMonitor(warmup=3)
+    for i, dt in enumerate((1.0, 2.0, 3.0)):
+        assert mon.record(i, dt) is False  # warmup never flags
+    assert mon.mean_step_time == pytest.approx(2.0)
+
+
+def test_straggler_warmup_seeds_variance():
+    import statistics
+
+    samples = (0.10, 0.14, 0.12, 0.16)
+    mon = StragglerMonitor(warmup=len(samples))
+    for i, dt in enumerate(samples):
+        mon.record(i, dt)
+    assert mon._var == pytest.approx(statistics.pvariance(samples))
+
+
+def test_straggler_patience_and_reset():
+    hits = []
+    mon = StragglerMonitor(
+        warmup=4, patience=3, threshold=2.0,
+        on_escalate=lambda s, dt: hits.append((s, dt)),
+    )
+    for i in range(10):
+        mon.record(i, 0.10 + 0.002 * (i % 2))
+    # patience - 1 slow steps then a fast one: the run resets, no escalation
+    mon.record(10, 1.0)
+    mon.record(11, 1.0)
+    mon.record(12, 0.10)
+    assert mon.escalations == 0 and not hits
+    # a full run of `patience` slow steps escalates exactly once and
+    # passes (step, dt) to the callback
+    for i in range(13, 16):
+        mon.record(i, 5.0)
+    assert mon.escalations == 1
+    assert hits == [(15, 5.0)]
+    assert mon._slow_run == 0  # reset after firing
+
+
+def test_injector_dead_shards_schedule():
+    inj = FailureInjector(
+        fail_at=((2, 1), (5, 3)), recover_at=((2, 3),)
+    )
+    assert inj.dead_shards(0) == frozenset()
+    assert inj.dead_shards(1) == frozenset({2})
+    assert inj.dead_shards(2) == frozenset({2})
+    assert inj.dead_shards(3) == frozenset({5})  # 2 back, 5 gone
+    assert inj.dead_shards(7) == frozenset({5})
+
+
+def test_injector_recovery_same_round_wins():
+    inj = FailureInjector(fail_at=((1, 2),), recover_at=((1, 2),))
+    assert inj.dead_shards(2) == frozenset()
+
+
+def test_injector_membership_at():
+    from repro.comm import Membership
+
+    inj = FailureInjector(fail_at=((2, 1),))
+    assert inj.membership_at(0, 4) == Membership.full(4)
+    assert inj.membership_at(1, 4) == Membership.from_dead(4, (2,))
+    with pytest.raises(ValueError):  # shard id out of range for the axis
+        inj.membership_at(1, 2)
+
+
+def test_parse_fail_spec():
+    parse = FailureInjector.parse_fail_spec
+    assert parse("2:1") == ((2, 1),)
+    assert parse("2:1, 5:3") == ((2, 1), (5, 3))
+    assert parse("") == ()
+    with pytest.raises(ValueError, match="expected shard:round"):
+        parse("2")
+    with pytest.raises(ValueError, match="expected shard:round"):
+        parse("a:b")
+
+
 def test_straggler_monitor_escalates():
     hits = []
     mon = StragglerMonitor(
