@@ -31,6 +31,11 @@ Record layout axes:
       (32 | 16 | 8, the ``repro.comm.quantize`` codec registry; stacked
       cells do no communication and always record 32).  Since PR 6 this
       is the fifth explicit switch.
+  * ``kernel`` — the round-body fusion of a collective ring cell
+      ("-" | "fused-ring"): the (pallas, ring, newton-schulz,
+      cholesky-qr2) cell consumes its staged hops inside one pallas_call
+      per round (DESIGN.md §3.3, new in v6) — a different program from
+      the jnp ring hop loop, so it diffs and gates only against itself.
 
 Timing discipline: jit + one warm-up call (compile time recorded
 separately), then ``reps`` timed calls each ending in
@@ -58,26 +63,34 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
-SCHEMA = "bench_aggregate/v5"
+SCHEMA = "bench_aggregate/v6"
 # v1 predates the ``orth=`` switch (upgraded with orth="qr"); v2 predates
 # the ``comm`` communication-topology axis (upgraded with the historical
 # backend pairing); v3 predates the ``bits`` wire-precision axis
 # (upgraded with bits=32 — every pre-v4 cell ran full-precision wires);
 # v4 predates the ``membership`` axis (upgraded with "full" — every
-# pre-v5 cell ran with all shards alive).  ``load`` upgrades all four.
+# pre-v5 cell ran with all shards alive); v5 predates the ``kernel``
+# axis (upgraded with "-" — before v6 every ring cell's hop compute was
+# plain jnp; the fused in-kernel ring rounds are new in v6).  ``load``
+# upgrades all five.
 SCHEMA_V1 = "bench_aggregate/v1"
 SCHEMA_V2 = "bench_aggregate/v2"
 SCHEMA_V3 = "bench_aggregate/v3"
 SCHEMA_V4 = "bench_aggregate/v4"
+SCHEMA_V5 = "bench_aggregate/v5"
 
 # Record keys that identify a configuration (the diff/check join key).
 # ``membership`` keys degraded-mesh cells ("full" | "dead=[k,..]"): a
 # masked collective runs a different schedule (survivor-only perm, extra
 # resync broadcast on the ring), so its wall time never joins against —
-# or gets grouped with — a full-membership cell's.
+# or gets grouped with — a full-membership cell's.  ``kernel`` keys the
+# round-body fusion ("-" | "fused-ring"): the (pallas, ring, NS,
+# cholesky-qr2) cell consumes its staged hops inside one pallas_call per
+# round (DESIGN.md §3.3) — a different program from the jnp ring, so it
+# gates only against itself.
 KEY_FIELDS = (
-    "topology", "comm", "bits", "membership", "backend", "polar", "orth",
-    "m", "d", "r", "n_iter"
+    "topology", "comm", "bits", "membership", "kernel", "backend", "polar",
+    "orth", "m", "d", "r", "n_iter"
 )
 
 DEFAULT_COMMS = ("psum", "gather", "ring")
@@ -118,17 +131,29 @@ def _time_fn(fn, arg, reps: int) -> Dict[str, float]:
     }
 
 
-def _mode(backend: str, comm: str = "-") -> str:
+def _mode(backend: str, comm: str = "-", kernel: str = "-") -> str:
     from repro.kernels.ops import on_tpu
 
     if backend != "pallas":
         return "compiled"
-    if comm == "ring":
-        # The ring schedule's hop compute is plain XLA (no stacked operand
+    if comm == "ring" and kernel == "-":
+        # The plain ring schedule's hop compute is jnp (no stacked operand
         # for the kernels to stream — see repro.comm.ring), so off-TPU it
-        # still runs compiled, not interpreted.
+        # still runs compiled, not interpreted.  The fused-ring kernel
+        # cell is a pallas_call like any other and interprets off-TPU.
         return "compiled"
     return "compiled" if on_tpu() else "interpret"
+
+
+def _kernel_cell(backend: str, comm: str, polar: str, orth: str) -> str:
+    """The ``kernel`` axis value of a collective cell: "fused-ring" iff
+    the cell routes to the in-kernel ring round (repro.core.distributed's
+    dispatch rule), "-" otherwise."""
+    fused = (
+        comm == "ring" and backend == "pallas"
+        and polar == "newton-schulz" and orth == "cholesky-qr2"
+    )
+    return "fused-ring" if fused else "-"
 
 
 def bench_stacked(shapes, backends, polars, orths, *, n_iter: int, reps: int):
@@ -151,7 +176,7 @@ def bench_stacked(shapes, backends, polars, orths, *, n_iter: int, reps: int):
                     )
                     rec = {
                         "topology": "stacked", "comm": "-", "bits": 32,
-                        "membership": "full",
+                        "membership": "full", "kernel": "-",
                         "backend": backend,
                         "polar": polar, "orth": orth,
                         "m": m, "d": d, "r": r, "n_iter": n_iter,
@@ -193,14 +218,20 @@ def bench_collective(
         for polar in polars:
             for orth in orths:
                 for comm in comms:
-                    # The ring's hop compute ignores backend= entirely
-                    # (repro.comm.ring), so sweeping both backends would
-                    # time the same compiled program twice.
-                    cell_backends = (
-                        ("xla",) if comm == "ring" and "xla" in backends
-                        else backends[:1] if comm == "ring"
-                        else backends
-                    )
+                    # The plain ring's hop compute ignores backend=
+                    # entirely (repro.comm.ring), so sweeping both
+                    # backends would time the same compiled program
+                    # twice — except the (pallas, NS, cholesky-qr2)
+                    # cell, which routes to the fused in-kernel ring
+                    # round and is a genuinely different program.
+                    if comm == "ring":
+                        cell_backends = tuple(
+                            b for b in backends
+                            if b == "xla"
+                            or _kernel_cell(b, comm, polar, orth) != "-"
+                        ) or backends[:1]
+                    else:
+                        cell_backends = backends
                     for backend in cell_backends:
                         for cb in bits:
 
@@ -221,20 +252,23 @@ def bench_collective(
                                     check_vma=False,
                                 )
                             )
+                            kern = _kernel_cell(backend, comm, polar, orth)
                             rec = {
                                 "topology": "collective", "comm": comm,
                                 "bits": cb, "membership": "full",
+                                "kernel": kern,
                                 "backend": backend,
                                 "polar": polar, "orth": orth, "m": n_dev,
                                 "d": d, "r": r,
                                 "n_iter": n_iter,
-                                "mode": _mode(backend, comm),
+                                "mode": _mode(backend, comm, kern),
                             }
                             rec.update(_time_fn(fn, vs, reps))
                             records.append(rec)
                             print(
                                 f"collective/{comm} m={n_dev} d={d} r={r} "
-                                f"{backend}/{polar}/{orth}/b{cb} "
+                                f"{backend}/{polar}/{orth}/b{cb}"
+                                f"{'/' + kern if kern != '-' else ''} "
                                 f"[{rec['mode']}]: {rec['wall_us']:.1f}us"
                             )
     return records
@@ -299,6 +333,13 @@ def load(path: str) -> dict:
         # all shards alive.
         for rec in doc.get("records", []):
             rec.setdefault("membership", "full")
+        doc["schema"] = SCHEMA_V5
+    if doc.get("schema") == SCHEMA_V5:
+        # v5 predates the ``kernel`` round-body-fusion axis: pre-v6 ring
+        # cells all ran the plain jnp hop loop (the fused in-kernel ring
+        # round did not exist), so every record upgrades to "-".
+        for rec in doc.get("records", []):
+            rec.setdefault("kernel", "-")
         doc["schema"] = SCHEMA
     if doc.get("schema") != SCHEMA:
         raise ValueError(
@@ -307,8 +348,14 @@ def load(path: str) -> dict:
     return doc
 
 
+_KEY_DEFAULTS = {"membership": "full", "kernel": "-"}
+
+
 def _key(rec: dict):
-    return tuple(rec[k] for k in KEY_FIELDS)
+    # Tolerate records that predate an axis (load() upgrades files, but
+    # in-memory docs may be handed to check()/diff() directly).
+    return tuple(rec.get(k, _KEY_DEFAULTS[k]) if k in _KEY_DEFAULTS else rec[k]
+                 for k in KEY_FIELDS)
 
 
 def pretty_print(doc: dict) -> None:
@@ -317,13 +364,14 @@ def pretty_print(doc: dict) -> None:
         f"# {SCHEMA} | jax {meta.get('jax')} on {meta.get('platform')} "
         f"x{meta.get('device_count')} | {meta.get('timestamp')}"
     )
-    hdr = ("topology", "comm", "bits", "membership", "backend", "polar",
-           "orth", "m", "d", "r", "n_iter", "mode", "wall_us", "compile_s")
+    hdr = ("topology", "comm", "bits", "membership", "kernel", "backend",
+           "polar", "orth", "m", "d", "r", "n_iter", "mode", "wall_us",
+           "compile_s")
     print(",".join(hdr))
     for rec in sorted(doc["records"], key=_key):
         print(
             f"{rec['topology']},{rec['comm']},{rec['bits']},"
-            f"{rec['membership']},"
+            f"{rec['membership']},{rec['kernel']},"
             f"{rec['backend']},{rec['polar']},{rec['orth']},"
             f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
             f"{rec['mode']},{rec['wall_us']:.1f},{rec['compile_s']:.2f}"
@@ -344,8 +392,8 @@ def diff(old: dict, new: dict) -> None:
             f"({p_old!r} vs {p_new!r}); wall times are not comparable"
         )
     olds = {_key(r): r for r in old["records"]}
-    print("topology,comm,bits,membership,backend,polar,orth,m,d,r,n_iter,"
-          "old_us,new_us,ratio")
+    print("topology,comm,bits,membership,kernel,backend,polar,orth,m,d,r,"
+          "n_iter,old_us,new_us,ratio")
     for rec in sorted(new["records"], key=_key):
         prev = olds.get(_key(rec))
         if prev is None:
@@ -357,7 +405,7 @@ def diff(old: dict, new: dict) -> None:
         old_us = f"{prev['wall_us']:.1f}" if prev else "-"
         print(
             f"{rec['topology']},{rec['comm']},{rec['bits']},"
-            f"{rec['membership']},"
+            f"{rec['membership']},{rec['kernel']},"
             f"{rec['backend']},{rec['polar']},{rec['orth']},"
             f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
             f"{old_us},{rec['wall_us']:.1f},{status}"
@@ -394,7 +442,7 @@ def check(
       the same factor is invisible — run ``calibrate=False`` on
       same-machine sweeps to see it.
     * **group verdicts.**  The primary verdict is per *path group*
-      (topology, comm, bits, membership) — the unit a code change
+      (topology, comm, bits, membership, kernel) — the unit a code change
       actually moves —
       using the median calibrated ratio of the group's cells (backend /
       polar / orth / shape variants).  A noisy-neighbor episode hits a
@@ -446,7 +494,7 @@ def check(
     groups: dict = {}
     for rec, prev, ratio in matched:
         g = (rec["topology"], rec["comm"], rec.get("bits", 32),
-             rec.get("membership", "full"))
+             rec.get("membership", "full"), rec.get("kernel", "-"))
         groups.setdefault(g, []).append(ratio / norms[rec["topology"]])
     regressions = [
         {"group": g, "cal_ratio": statistics.median(rs), "cells": len(rs)}

@@ -51,9 +51,8 @@ def main() -> None:
             if bad:
                 for r in bad:
                     if "group" in r:
-                        topo, comm, backend = r["group"]
                         print(
-                            f"REGRESSION group {topo},{comm},{backend}: "
+                            f"REGRESSION group {','.join(map(str, r['group']))}: "
                             f"median {r['cal_ratio']:.2f}x machine-"
                             f"calibrated over {r['cells']} cells",
                             file=sys.stderr,

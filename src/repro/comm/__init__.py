@@ -45,4 +45,9 @@ from repro.comm.topology import (  # noqa: F401
     paper_coordinator_words,
     resolve_topology,
 )
-from repro.comm.ring import DEFAULT_RING_CHUNK, ring_rounds  # noqa: F401
+from repro.comm.ring import (  # noqa: F401
+    DEFAULT_RING_CHUNK,
+    chunk_spans,
+    fused_ring_rounds,
+    ring_rounds,
+)

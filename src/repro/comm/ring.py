@@ -62,7 +62,12 @@ from repro.comm.quantize import (
     wire_broadcast,
 )
 
-__all__ = ["DEFAULT_RING_CHUNK", "ring_rounds"]
+__all__ = [
+    "DEFAULT_RING_CHUNK",
+    "chunk_spans",
+    "ring_rounds",
+    "fused_ring_rounds",
+]
 
 # Salt for the ring's per-shard stochastic-rounding streams ("RING").
 _RING_SALT = 0x52494E47
@@ -77,10 +82,22 @@ _RING_SALT = 0x52494E47
 DEFAULT_RING_CHUNK = 2048
 
 
-def _chunk_spans(d: int, chunk: int) -> List[Tuple[int, int]]:
-    """[start, end) row spans tiling d; the last span may be short."""
+def chunk_spans(d: int, chunk: int) -> List[Tuple[int, int]]:
+    """[start, end) row spans tiling d; the last span may be short.
+
+    This is the single home of the ring's chunk geometry: the jnp schedule
+    below, the fused Pallas kernel
+    (``repro.kernels.procrustes_align.fused_ring_round``) and the planner's
+    sizing rule (``repro.plan.choose_ring_chunk``) all derive their span
+    count from here, so the kernel cannot drift from the wire schedule it
+    fuses.  Pure arithmetic — safe to import from the cost model.
+    """
     chunk = max(1, min(chunk, d))
     return [(s, min(s + chunk, d)) for s in range(0, d, chunk)]
+
+
+# Back-compat alias (pre-export spelling).
+_chunk_spans = chunk_spans
 
 
 def _aligned_contribution(chunks, ref_chunks, *, polar: str):
@@ -189,6 +206,105 @@ def ring_rounds(
     return out
 
 
+def fused_ring_rounds(
+    v_local: jax.Array,
+    ref: jax.Array | None = None,
+    *,
+    axis_name: str,
+    n_iter: int = 1,
+    chunk: int = DEFAULT_RING_CHUNK,
+    comm_bits: int = 32,
+    membership: Membership | None = None,
+) -> jax.Array:
+    """``n_iter`` rounds with the hop schedule fused *into* the kernel.
+
+    This is the ``("pallas", "ring")`` execution cell (DESIGN.md §3.3): the
+    wire still moves exactly the ring's per-round payload — each shard's
+    (d, r) basis at wire precision, m'-1 hop-equivalents on the wire (the
+    all-gather below lowers to a ring of m'-1 hops) — but the per-hop
+    Gram / Newton–Schulz polar / accumulate runs *inside* one Pallas launch
+    per round (``repro.kernels.ops.fused_ring_round``), with each hop's
+    basis chunked into double-buffered VMEM scratch while the previous
+    hop's compute occupies the MXU.  The cell pins ``polar="newton-schulz"``
+    and ``orth="cholesky-qr2"`` (the matmul-only methods the kernel fuses);
+    ``repro.core.distributed`` routes every other (polar, orth) pair to the
+    jnp schedule above.
+
+    Collective structure (the jaxpr the structure tests assert): the
+    error-feedback recurrence depends only on ``v_local`` and the previous
+    round's residual — never on a round *output* — so all ``n_iter``
+    encodes and wire all-gathers are hoisted ahead of the first launch.
+    The program is [ref broadcast, n_iter encode+gather, n_iter
+    pallas_calls] with **zero collectives and zero XLA compute between
+    launches**: round k's (d, r) f32 output feeds round k+1's reference
+    operand directly.  At 32 bits the payload is round-invariant, so a
+    single all-gather feeds every launch.
+
+    ``comm_bits`` follows the jnp ring's contract exactly — quantize once
+    per round, per-shard error feedback, same salt and per-round key folds
+    (``_RING_SALT``) — so the wire payloads are bit-identical to the jnp
+    schedule's and the ``PARITY_TOL[bits]`` bounds carry over.  Under a
+    degraded ``membership`` the survivors' rows are selected by static
+    indexing (row 0 = first survivor, the reference default), every shard
+    — dead ones included — decodes the same m' payloads, and the output is
+    replicated mesh-wide with *no* post-round resync broadcast (unlike the
+    jnp ring, dead shards here hold the gathered payloads too).
+
+    Returns the (d, r) round output in ``v_local.dtype``.
+    """
+    from repro.kernels import ops as kops
+
+    codec = get_codec(comm_bits)
+    from repro.comm.topology import axis_size
+
+    m = axis_size(axis_name)
+    mem = resolve_membership(membership, m)
+    base_key = shard_key(axis_name, _RING_SALT) if codec.stochastic else None
+    if ref is None:
+        bkey = (
+            jax.random.fold_in(base_key, 0) if codec.stochastic else None
+        )
+        ref = wire_broadcast(
+            v_local, axis_name, codec, src=mem.first_active, key=bkey
+        )
+    idxs = None if mem.is_full else jnp.asarray(mem.indices)
+
+    # Stage every round's wire payload BEFORE the first launch (see
+    # docstring): the EF recurrence never reads a round output.
+    payloads = []
+    if codec.lossy:
+        err = jnp.zeros(v_local.shape, jnp.float32)
+        for k in range(max(n_iter, 1)):
+            rkey = (
+                jax.random.fold_in(base_key, k + 1)
+                if codec.stochastic else None
+            )
+            send = v_local.astype(jnp.float32) + err
+            data, scale = codec.encode(send, key=rkey)
+            err = codec.residual(send, data, scale)
+            g = from_wire(jax.lax.all_gather(to_wire(data), axis_name), codec)
+            gs = (
+                jax.lax.all_gather(scale, axis_name)
+                if scale is not None else None
+            )
+            if idxs is not None:
+                g = g[idxs]
+                gs = None if gs is None else gs[idxs]
+            payloads.append((g, gs))
+    else:
+        g = jax.lax.all_gather(v_local.astype(jnp.float32), axis_name)
+        if idxs is not None:
+            g = g[idxs]
+        payloads = [(g, None)] * max(n_iter, 1)
+
+    out = ref.astype(jnp.float32)
+    for g, gs in payloads:
+        out = kops.fused_ring_round(
+            g, out, scales=gs, ring_chunk=chunk, use_kernel=True
+        )
+    return out.astype(v_local.dtype)
+
+
 def _ring_round(
     v_local: jax.Array,
     ref: jax.Array,
@@ -218,7 +334,7 @@ def _ring_round(
     ``ring_rounds``.
     """
     d = v_local.shape[0]
-    spans = _chunk_spans(d, chunk)
+    spans = chunk_spans(d, chunk)
     ref_c = [ref[s:e].astype(jnp.float32) for s, e in spans]
     idxs = membership.indices
     k = membership.m_active

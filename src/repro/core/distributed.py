@@ -26,7 +26,11 @@ gather topology's stacked rounds, and the psum topology's per-shard align
 "newton-schulz") and ``orth=`` ("qr" | "cholesky-qr2") select the round's
 r x r rotation method and final orthonormalization; the
 (pallas, gather, newton-schulz, cholesky-qr2) cell runs each round as a
-single fused kernel launch (DESIGN.md §3.2).  Every
+single fused kernel launch (DESIGN.md §3.2), and the
+(pallas, ring, newton-schulz, cholesky-qr2) cell fuses the ring's hop
+schedule into that launch too — one kernel = one round *including the
+wire consumption* (``repro.comm.ring.fused_ring_rounds``, DESIGN.md
+§3.3).  Every
 (backend x topology x polar x orth) cell computes the same estimator — the
 parity suites (``tests/test_topology.py``,
 ``tests/test_backend_invariance.py``) assert it.  A fifth orthogonal axis,
@@ -51,6 +55,7 @@ from jax.sharding import PartitionSpec as P
 from repro.comm import (
     axis_size,
     broadcast_from,
+    fused_ring_rounds,
     get_codec,
     resolve_topology,
     ring_rounds,
@@ -205,6 +210,23 @@ def procrustes_average_collective(
             vs, ref, n_iter=n_iter, backend=backend, polar=polar, orth=orth
         )
     if topo == "ring":
+        if (
+            backend == "pallas"
+            and polar == "newton-schulz"
+            and orth == "cholesky-qr2"
+        ):
+            # The ("pallas", "ring") execution cell: the hop schedule is
+            # fused INTO one Pallas launch per round (DESIGN.md §3.3) —
+            # per-hop payload chunks double-buffer through VMEM scratch
+            # while the previous hop's Gram/polar/accumulate holds the
+            # MXU, and the running V̄ stays chunk-resident so the round
+            # streams each basis from HBM exactly once.  The cell pins
+            # the matmul-only round methods (the kernel fuses them); any
+            # other (polar, orth) pair keeps the jnp schedule below.
+            return fused_ring_rounds(
+                v_local, ref, axis_name=axis_name, n_iter=n_iter,
+                chunk=pl.ring_chunk, comm_bits=pl.comm_bits, membership=mem,
+            )
         return ring_rounds(
             v_local, ref, axis_name=axis_name, n_iter=n_iter,
             polar=polar, orth=orth, chunk=pl.ring_chunk,

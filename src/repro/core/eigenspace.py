@@ -31,7 +31,11 @@ The aggregation hot path takes three switches (see DESIGN.md §3):
     ``polar="newton-schulz"`` on the pallas backend, folds the *entire*
     round into a single kernel launch
     (``repro.kernels.procrustes_align.fused_round``) — no SVD, no
-    Householder QR, no XLA compute anywhere in a refinement round.
+    Householder QR, no XLA compute anywhere in a refinement round.  The
+    same kernel combination on the *ring* topology has a ring-scheduled
+    sibling (``fused_ring_round``, DESIGN.md §3.3) whose grid drives the
+    hops themselves: the staged wire payloads are consumed inside the
+    launch and the running V̄ never leaves VMEM.
 
 All round structure funnels through one round-body dispatch
 (``refinement_rounds``); every cell of the (backend x polar x orth) cube

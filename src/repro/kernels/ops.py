@@ -35,6 +35,7 @@ __all__ = [
     "align_average",
     "align_one",
     "fused_round",
+    "fused_ring_round",
     "attention",
 ]
 
@@ -139,6 +140,28 @@ def fused_round(
     ``polar="newton-schulz", orth="cholesky-qr2"`` pallas path)."""
     return _dispatch(
         _pa.fused_round, _ref.fused_round, use_kernel, vs, ref, **kw
+    )
+
+
+def fused_ring_round(
+    vs: jax.Array,
+    ref: jax.Array,
+    *,
+    scales: jax.Array | None = None,
+    use_kernel: bool | None = None,
+    **kw,
+) -> jax.Array:
+    """One ring-scheduled Algorithm-1 round over a staged (m', d, r) stack
+    of **wire-dtype** payloads (f32/bf16/int8 + optional (m', r) scales) —
+    the hop loop is the kernel grid itself, the running V̄ stays
+    VMEM-resident, and the output is (d, r) f32 (ready to be the next
+    launch's reference with zero XLA ops in between).  This is the
+    ``("pallas", "ring")`` execution cell's compute
+    (``repro.comm.ring.fused_ring_rounds`` stages the wire and loops the
+    rounds); the oracle decodes and runs the stacked round in XLA."""
+    return _dispatch(
+        _pa.fused_ring_round, _ref.fused_ring_round, use_kernel,
+        vs, ref, scales, **kw,
     )
 
 

@@ -15,6 +15,7 @@ __all__ = [
     "batched_gram_polar",
     "align_average",
     "fused_round",
+    "fused_ring_round",
     "attention",
 ]
 
@@ -63,6 +64,32 @@ def fused_round(
         zs = batched_gram_polar(vs, out, ns_iters=ns_iters)
         out = cholesky_qr2(align_average(vs, zs)).astype(vs.dtype)
     return out
+
+
+def fused_ring_round(
+    vs: jax.Array,
+    ref: jax.Array,
+    scales: jax.Array | None = None,
+    *,
+    ring_chunk: int | None = None,
+    ns_iters: int | None = None,
+) -> jax.Array:
+    """Oracle for the fused ring-round kernel: decode the (m', d, r) wire
+    stack (f32 identity / bf16 upcast / int8 per-column scale), then one
+    round of ``cholesky_qr2(align_average(vs, batched_gram_polar(vs, ref)))``.
+    ``ring_chunk`` is the kernel's DMA granularity — semantically inert
+    here.  Returns (d, r) f32, matching the kernel's output dtype."""
+    # Function-level import for the same circularity reason as above.
+    from repro.core.orthonorm import cholesky_qr2
+
+    del ring_chunk
+    vsf = vs.astype(jnp.float32)
+    if vs.dtype == jnp.int8:
+        if scales is None:
+            raise ValueError("int8 wire stack needs its (m, r) scales")
+        vsf = vsf * scales[:, None, :]
+    zs = batched_gram_polar(vsf, ref.astype(jnp.float32), ns_iters=ns_iters)
+    return cholesky_qr2(align_average(vsf, zs)).astype(jnp.float32)
 
 
 def align_average(vs: jax.Array, zs: jax.Array) -> jax.Array:

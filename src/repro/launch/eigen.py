@@ -185,8 +185,11 @@ def main():
     ap.add_argument("--topology", default="auto", choices=TOPOLOGY_CHOICES,
                     help="communication schedule of the aggregation "
                          "(repro.comm): psum all-reduces, coordinator "
-                         "all-gather, or the overlapped ring; auto keeps "
-                         "the historical backend pairing (or defers to "
+                         "all-gather, or the overlapped ring (with "
+                         "--backend pallas --polar newton-schulz --orth "
+                         "cholesky-qr2 the ring hops fuse into the "
+                         "one-launch kernel round); auto keeps the "
+                         "historical backend pairing (or defers to "
                          "the planner under --plan auto)")
     ap.add_argument("--comm-bits", default=None, choices=COMM_BITS_CHOICES,
                     help="wire precision of the aggregation collectives "

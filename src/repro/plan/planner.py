@@ -57,6 +57,7 @@ from typing import List, Optional, Sequence, Tuple, Union
 
 from repro.comm.membership import Membership, resolve_membership
 from repro.comm.quantize import COMM_BITS, COMM_BITS_CHOICES, resolve_comm_bits
+from repro.comm.ring import DEFAULT_RING_CHUNK, chunk_spans
 from repro.comm.topology import TOPOLOGIES, TOPOLOGY_CHOICES, comm_cost
 from repro.core.orthonorm import ORTH_METHODS
 from repro.core.procrustes import DEFAULT_NS_ITERS, POLAR_METHODS
@@ -309,14 +310,22 @@ def _score_one(
     n = max(n_iter, 1)
     basis = d * r
     chunk = ring_chunk if ring_chunk else choose_ring_chunk(d, r, device)
-    nchunks = math.ceil(d / chunk)
+    nchunks = len(chunk_spans(d, chunk))
     on_tpu = device.kind == "tpu"
-    # The fully fused one-launch round exists only on the stacked form
+    # The fully fused one-launch round exists on the stacked form
     # (DESIGN.md §3.2): pallas + newton-schulz + cholesky-qr2 + gather.
     fused = b == "pallas" and p == "newton-schulz" and o == "cholesky-qr2" and t == "gather"
-    # Ring hop compute is plain jnp regardless of backend (no stacked
-    # operand for the streaming kernels — repro.comm.ring docstring).
-    ring = t == "ring" and context == "collective"
+    # Its ring-scheduled sibling (§3.3) consumes the staged wire inside
+    # the same launch — the hop loop is the kernel grid, the running V̄
+    # stays VMEM-resident.
+    fused_ring = (
+        b == "pallas" and p == "newton-schulz" and o == "cholesky-qr2"
+        and t == "ring" and context == "collective"
+    )
+    # Every other ring cell's hop compute is plain jnp regardless of
+    # backend (no stacked operand for the streaming kernels —
+    # repro.comm.ring docstring).
+    ring = t == "ring" and context == "collective" and not fused_ring
     kernels_in_play = b == "pallas" and not ring
 
     feasible = True
@@ -327,6 +336,17 @@ def _score_one(
         else:
             feasible = False
             notes.append("pallas compiles on TPU only")
+    if fused_ring:
+        # §3.3: three wire-width hop slots plus the f32 running V̄ / ref /
+        # out tiles live in VMEM for the whole launch; past the envelope
+        # the one-launch schedule cannot be scheduled at all.
+        vmem_bytes = basis * (3 * cb / 8.0 + 3 * 4.0)
+        if vmem_bytes > device.vmem_cap_bytes:
+            feasible = False
+            notes.append(
+                f"fused-ring working set {vmem_bytes/2**20:.1f}MiB over the "
+                f"{device.vmem_cap_bytes/2**20:.0f}MiB VMEM envelope"
+            )
 
     if t == "psum" and cb == 8 and m > 126 and context == "collective":
         # The shared-scale int8 psum sums s8 payloads on the wire; its
@@ -357,6 +377,15 @@ def _score_one(
             # the broadcast's scale psum); ring hops pipeline theirs with
             # the chunk permutes, so only the broadcast doubles there.
             colls += {"psum": bcast + n, "gather": 1, "ring": bcast}[t]
+        if fused_ring:
+            # Hops are consumed inside the launch (the same (m-1)·d·r
+            # wire volume, since an all-gather lowers to the ring's m-1
+            # hops): one staged gather per round under error feedback,
+            # or a single gather for all rounds at exact precision (the
+            # payload is round-invariant); int8's scales gather rides
+            # per message, as does the broadcast's scale psum.
+            gathers = 1 if cb == 32 else n
+            colls = bcast + gathers + ((bcast + gathers) if cb == 8 else 0)
     if m <= 1:
         # A 1-shard axis puts nothing on the wire; every schedule
         # degenerates to the serial rounds.
@@ -377,8 +406,14 @@ def _score_one(
         compute_s *= device.interpret_penalty
 
     # ---- memory ----------------------------------------------------------
-    stream_passes = 4 if fused else 2  # §3.2: the fused round streams vs 4x
-    hbm_bytes = n * (stream_passes * bases + 2) * basis * 4.0
+    if fused_ring:
+        # §3.3: the resident V̄ reclaims the fused round's 4x vs-stream —
+        # each hop's wire payload streams from HBM exactly once, at wire
+        # width, and only the ref read + out write touch HBM at f32.
+        hbm_bytes = n * (bases * basis * (cb / 8.0) + 2 * basis * 4.0)
+    else:
+        stream_passes = 4 if fused else 2  # §3.2: fused streams vs 4x
+        hbm_bytes = n * (stream_passes * bases + 2) * basis * 4.0
     memory_s = hbm_bytes / device.hbm_bw
     stack_bytes = m * basis * 4.0
     if t == "gather" and context == "collective" and stack_bytes > 0.25 * device.hbm_cap_bytes:
@@ -403,7 +438,7 @@ def _score_one(
         launches = 0
         lapack = n * (m * polar_lapack + orth_lapack)
     elif b == "pallas":
-        if fused:
+        if fused or fused_ring:
             ops, launches, lapack = 0, n, 0
         else:
             launches = n * 2  # gram(+fused NS) kernel + apply kernel
@@ -426,9 +461,10 @@ def _score_one(
     )
 
     # ---- total -----------------------------------------------------------
-    if ring and m > 1:
-        # The ring's selling point: the wire overlaps the Gram phase, so
-        # comm and compute race instead of adding.
+    if (ring or fused_ring) and m > 1:
+        # The ring's selling point: the wire overlaps the Gram phase
+        # (in-kernel, the hop DMA overlaps the previous hop's MXU work),
+        # so comm and compute race instead of adding.
         total_s = max(comm_s, compute_s, memory_s) + latency_s
     else:
         total_s = comm_s + max(compute_s, memory_s) + latency_s
@@ -552,7 +588,6 @@ def resolve_plan(
     ``comm_cost(..., membership=)`` (what compiled HLO measures).
     """
     from repro.comm.topology import resolve_topology
-    from repro.comm.ring import DEFAULT_RING_CHUNK
     from repro.kernels.ops import resolve_backend
 
     if isinstance(plan, Plan):

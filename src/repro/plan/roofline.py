@@ -67,7 +67,12 @@ class DeviceModel:
     ``interpret_penalty`` multiplies Pallas-kernel compute where the
     kernels cannot compile (off-TPU the Pallas interpreter is a
     correctness path, not a performance one); ``hbm_cap_bytes`` bounds
-    working sets (the gather topology's (m, d, r) stack).
+    working sets (the gather topology's (m, d, r) stack);
+    ``vmem_cap_bytes`` bounds *kernel-resident* working sets — the fused
+    ring round holds its triple-slotted hop buffer plus the running V̄ /
+    ref / out tiles entirely in VMEM (DESIGN.md §3.3), so the planner
+    marks that cell infeasible when (3·wire + 3·f32)·d·r outgrows the
+    envelope.
     """
 
     kind: str
@@ -80,6 +85,7 @@ class DeviceModel:
     coll_latency_s: float
     interpret_penalty: float
     hbm_cap_bytes: float
+    vmem_cap_bytes: float = float(16 * 2**20)  # the 16 MiB/core envelope
 
     def calibrated(
         self,
@@ -112,6 +118,7 @@ TPU_V5E = DeviceModel(
     coll_latency_s=1e-6,
     interpret_penalty=200.0,
     hbm_cap_bytes=16e9,
+    vmem_cap_bytes=float(16 * 2**20),
 )
 
 # A host CPU: throughput numbers are deliberately modest (the planner
@@ -129,6 +136,9 @@ CPU_HOST = DeviceModel(
     coll_latency_s=5e-7,
     interpret_penalty=200.0,
     hbm_cap_bytes=3.2e10,
+    # Interpreted kernels hold "VMEM" scratch in host RAM — the envelope
+    # is soft there, so it only rejects genuinely outsized working sets.
+    vmem_cap_bytes=float(256 * 2**20),
 )
 
 # Generic accelerator fallback: the Pallas kernels are Mosaic (TPU-only),
@@ -145,6 +155,7 @@ GPU_GENERIC = DeviceModel(
     coll_latency_s=3e-6,
     interpret_penalty=200.0,
     hbm_cap_bytes=4e10,
+    vmem_cap_bytes=float(16 * 2**20),
 )
 
 DEVICE_MODELS: Dict[str, DeviceModel] = {
