@@ -24,9 +24,12 @@ Record layout axes:
                      to record it on a 1-CPU host, as the CI bench-smoke
                      lane does).
   * ``comm`` — the *communication topology* of a collective cell
-      ("psum" | "gather" | "ring", the ``repro.comm`` registry; "-" on
-      stacked cells, which do no communication).  Since PR 4 this is an
-      explicit switch, independent of ``backend``.
+      ("psum" | "gather" | "ring" | "hier", the ``repro.comm`` registry;
+      "-" on stacked cells, which do no communication).  Since PR 4 this
+      is an explicit switch, independent of ``backend``.
+  * ``pods`` — the mesh shape of a collective cell: 0 on flat 1-D
+      cells; p > 0 on ``comm="hier"`` cells, which run over the 2-D
+      (p, m/p) (pod, local) mesh (new in v7; p = m/2 on the CI host).
   * ``bits`` — the *wire precision* of a collective cell's payloads
       (32 | 16 | 8, the ``repro.comm.quantize`` codec registry; stacked
       cells do no communication and always record 32).  Since PR 6 this
@@ -48,7 +51,7 @@ compare across modes.
 Run:  PYTHONPATH=src python -m benchmarks.bench_aggregate \
           [--tiny] [--out BENCH_aggregate.json] [--reps 5] [--n-iter 2]
           [--backends xla,pallas] [--polars svd,newton-schulz]
-          [--orths qr,cholesky-qr2] [--comms psum,gather,ring]
+          [--orths qr,cholesky-qr2] [--comms psum,gather,ring,hier]
           [--bits 32,8] [--shapes 8x1024x16,16x2048x32]
 """
 
@@ -63,7 +66,7 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
-SCHEMA = "bench_aggregate/v6"
+SCHEMA = "bench_aggregate/v7"
 # v1 predates the ``orth=`` switch (upgraded with orth="qr"); v2 predates
 # the ``comm`` communication-topology axis (upgraded with the historical
 # backend pairing); v3 predates the ``bits`` wire-precision axis
@@ -71,13 +74,16 @@ SCHEMA = "bench_aggregate/v6"
 # v4 predates the ``membership`` axis (upgraded with "full" — every
 # pre-v5 cell ran with all shards alive); v5 predates the ``kernel``
 # axis (upgraded with "-" — before v6 every ring cell's hop compute was
-# plain jnp; the fused in-kernel ring rounds are new in v6).  ``load``
-# upgrades all five.
+# plain jnp; the fused in-kernel ring rounds are new in v6); v6 predates
+# the ``pods`` mesh-shape axis (upgraded with 0 — every pre-v7 collective
+# cell ran over the flat 1-D data mesh; the hierarchical 2-D cells are
+# new in v7).  ``load`` upgrades all six.
 SCHEMA_V1 = "bench_aggregate/v1"
 SCHEMA_V2 = "bench_aggregate/v2"
 SCHEMA_V3 = "bench_aggregate/v3"
 SCHEMA_V4 = "bench_aggregate/v4"
 SCHEMA_V5 = "bench_aggregate/v5"
+SCHEMA_V6 = "bench_aggregate/v6"
 
 # Record keys that identify a configuration (the diff/check join key).
 # ``membership`` keys degraded-mesh cells ("full" | "dead=[k,..]"): a
@@ -87,13 +93,16 @@ SCHEMA_V5 = "bench_aggregate/v5"
 # round-body fusion ("-" | "fused-ring"): the (pallas, ring, NS,
 # cholesky-qr2) cell consumes its staged hops inside one pallas_call per
 # round (DESIGN.md §3.3) — a different program from the jnp ring, so it
-# gates only against itself.
+# gates only against itself.  ``pods`` keys the mesh shape of a
+# hierarchical cell (0 on every flat-mesh cell; p > 0 means the 2-D
+# (p, m/p) mesh of ``comm="hier"``) — a different collective schedule
+# per pod count, so each gates only against its own.
 KEY_FIELDS = (
-    "topology", "comm", "bits", "membership", "kernel", "backend", "polar",
-    "orth", "m", "d", "r", "n_iter"
+    "topology", "comm", "pods", "bits", "membership", "kernel", "backend",
+    "polar", "orth", "m", "d", "r", "n_iter"
 )
 
-DEFAULT_COMMS = ("psum", "gather", "ring")
+DEFAULT_COMMS = ("psum", "gather", "ring", "hier")
 DEFAULT_BITS = (32, 8)
 
 DEFAULT_SHAPES = ((8, 1024, 16), (16, 2048, 32), (8, 4096, 64))
@@ -175,7 +184,8 @@ def bench_stacked(shapes, backends, polars, orths, *, n_iter: int, reps: int):
                         )
                     )
                     rec = {
-                        "topology": "stacked", "comm": "-", "bits": 32,
+                        "topology": "stacked", "comm": "-", "pods": 0,
+                        "bits": 32,
                         "membership": "full", "kernel": "-",
                         "backend": backend,
                         "polar": polar, "orth": orth,
@@ -209,6 +219,14 @@ def bench_collective(
               "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
         return []
     mesh = make_mesh((n_dev,), ("data",))
+    # The hierarchical lane runs over the 2-D (pods, local) mesh; pod
+    # count fixed at n_dev/2 (4 pods of 2 on the forced-8-device CI
+    # host) so the inter-pod ring and the intra-pod psum both exist.
+    hier_pods = n_dev // 2 if n_dev % 2 == 0 and n_dev >= 4 else 0
+    hier_mesh = (
+        make_mesh((hier_pods, n_dev // hier_pods), ("pod", "data"))
+        if hier_pods else None
+    )
     records = []
     for _, d, r in shapes:
         vs = _stack(n_dev, d, r)
@@ -224,6 +242,11 @@ def bench_collective(
                     # twice — except the (pallas, NS, cholesky-qr2)
                     # cell, which routes to the fused in-kernel ring
                     # round and is a genuinely different program.
+                    hier = comm == "hier"
+                    if hier and hier_mesh is None:
+                        print(f"# collective/hier cells skipped: "
+                              f"{n_dev} devices do not tile into pods")
+                        continue
                     if comm == "ring":
                         cell_backends = tuple(
                             b for b in backends
@@ -241,20 +264,29 @@ def bench_collective(
                                     v[0], axis_name="data", n_iter=n_iter,
                                     backend=b, polar=p, orth=o, topology=t,
                                     comm_bits=w,
+                                    pod_axis="pod" if t == "hier" else None,
                                 )
                                 return out[None]
 
                             fn = jax.jit(
                                 shard_map(
-                                    shard_fn, mesh=mesh,
-                                    in_specs=P("data", None, None),
-                                    out_specs=P("data", None, None),
+                                    shard_fn,
+                                    mesh=hier_mesh if hier else mesh,
+                                    in_specs=P(
+                                        ("pod", "data") if hier else "data",
+                                        None, None
+                                    ),
+                                    out_specs=P(
+                                        ("pod", "data") if hier else "data",
+                                        None, None
+                                    ),
                                     check_vma=False,
                                 )
                             )
                             kern = _kernel_cell(backend, comm, polar, orth)
                             rec = {
                                 "topology": "collective", "comm": comm,
+                                "pods": hier_pods if hier else 0,
                                 "bits": cb, "membership": "full",
                                 "kernel": kern,
                                 "backend": backend,
@@ -265,8 +297,10 @@ def bench_collective(
                             }
                             rec.update(_time_fn(fn, vs, reps))
                             records.append(rec)
+                            pods_tag = f"/p{hier_pods}" if hier else ""
                             print(
-                                f"collective/{comm} m={n_dev} d={d} r={r} "
+                                f"collective/{comm}{pods_tag} m={n_dev} "
+                                f"d={d} r={r} "
                                 f"{backend}/{polar}/{orth}/b{cb}"
                                 f"{'/' + kern if kern != '-' else ''} "
                                 f"[{rec['mode']}]: {rec['wall_us']:.1f}us"
@@ -340,6 +374,13 @@ def load(path: str) -> dict:
         # round did not exist), so every record upgrades to "-".
         for rec in doc.get("records", []):
             rec.setdefault("kernel", "-")
+        doc["schema"] = SCHEMA_V6
+    if doc.get("schema") == SCHEMA_V6:
+        # v6 predates the ``pods`` mesh-shape axis: every pre-v7 cell ran
+        # over the flat 1-D data mesh (the hierarchical (pods, local)
+        # cells are new in v7), so every record upgrades to 0.
+        for rec in doc.get("records", []):
+            rec.setdefault("pods", 0)
         doc["schema"] = SCHEMA
     if doc.get("schema") != SCHEMA:
         raise ValueError(
@@ -348,7 +389,7 @@ def load(path: str) -> dict:
     return doc
 
 
-_KEY_DEFAULTS = {"membership": "full", "kernel": "-"}
+_KEY_DEFAULTS = {"membership": "full", "kernel": "-", "pods": 0}
 
 
 def _key(rec: dict):
@@ -364,13 +405,14 @@ def pretty_print(doc: dict) -> None:
         f"# {SCHEMA} | jax {meta.get('jax')} on {meta.get('platform')} "
         f"x{meta.get('device_count')} | {meta.get('timestamp')}"
     )
-    hdr = ("topology", "comm", "bits", "membership", "kernel", "backend",
-           "polar", "orth", "m", "d", "r", "n_iter", "mode", "wall_us",
-           "compile_s")
+    hdr = ("topology", "comm", "pods", "bits", "membership", "kernel",
+           "backend", "polar", "orth", "m", "d", "r", "n_iter", "mode",
+           "wall_us", "compile_s")
     print(",".join(hdr))
     for rec in sorted(doc["records"], key=_key):
         print(
-            f"{rec['topology']},{rec['comm']},{rec['bits']},"
+            f"{rec['topology']},{rec['comm']},{rec.get('pods', 0)},"
+            f"{rec['bits']},"
             f"{rec['membership']},{rec['kernel']},"
             f"{rec['backend']},{rec['polar']},{rec['orth']},"
             f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
@@ -392,8 +434,8 @@ def diff(old: dict, new: dict) -> None:
             f"({p_old!r} vs {p_new!r}); wall times are not comparable"
         )
     olds = {_key(r): r for r in old["records"]}
-    print("topology,comm,bits,membership,kernel,backend,polar,orth,m,d,r,"
-          "n_iter,old_us,new_us,ratio")
+    print("topology,comm,pods,bits,membership,kernel,backend,polar,orth,"
+          "m,d,r,n_iter,old_us,new_us,ratio")
     for rec in sorted(new["records"], key=_key):
         prev = olds.get(_key(rec))
         if prev is None:
@@ -404,7 +446,8 @@ def diff(old: dict, new: dict) -> None:
             status = f"{rec['wall_us'] / max(prev['wall_us'], 1e-9):.3f}"
         old_us = f"{prev['wall_us']:.1f}" if prev else "-"
         print(
-            f"{rec['topology']},{rec['comm']},{rec['bits']},"
+            f"{rec['topology']},{rec['comm']},{rec.get('pods', 0)},"
+            f"{rec['bits']},"
             f"{rec['membership']},{rec['kernel']},"
             f"{rec['backend']},{rec['polar']},{rec['orth']},"
             f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
@@ -442,8 +485,8 @@ def check(
       the same factor is invisible — run ``calibrate=False`` on
       same-machine sweeps to see it.
     * **group verdicts.**  The primary verdict is per *path group*
-      (topology, comm, bits, membership, kernel) — the unit a code change
-      actually moves —
+      (topology, comm, pods, bits, membership, kernel) — the unit a code
+      change actually moves —
       using the median calibrated ratio of the group's cells (backend /
       polar / orth / shape variants).  A noisy-neighbor episode hits a
       few arbitrary cells; a real path regression moves its whole group.
@@ -493,7 +536,8 @@ def check(
     }
     groups: dict = {}
     for rec, prev, ratio in matched:
-        g = (rec["topology"], rec["comm"], rec.get("bits", 32),
+        g = (rec["topology"], rec["comm"], rec.get("pods", 0),
+             rec.get("bits", 32),
              rec.get("membership", "full"), rec.get("kernel", "-"))
         groups.setdefault(g, []).append(ratio / norms[rec["topology"]])
     regressions = [

@@ -21,6 +21,7 @@ import time (core/kernels imports are function-level), so it sits below
 
 from repro.comm.membership import (  # noqa: F401
     Membership,
+    pod_membership,
     resolve_membership,
 )
 from repro.comm.quantize import (  # noqa: F401
@@ -35,6 +36,9 @@ from repro.comm.quantize import (  # noqa: F401
     wire_psum_mean,
 )
 from repro.comm.topology import (  # noqa: F401
+    DATA_AXIS,
+    MODEL_AXIS,
+    POD_AXIS,
     TOPOLOGIES,
     TOPOLOGY_CHOICES,
     CommCost,
@@ -51,3 +55,4 @@ from repro.comm.ring import (  # noqa: F401
     fused_ring_rounds,
     ring_rounds,
 )
+from repro.comm.hier import hier_rounds  # noqa: F401

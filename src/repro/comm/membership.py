@@ -33,7 +33,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, Optional, Tuple
 
-__all__ = ["Membership", "resolve_membership"]
+__all__ = ["Membership", "pod_membership", "resolve_membership"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +117,34 @@ class Membership:
                 f"recovered shard ids {bad} out of range for m={self.m}"
             )
         return Membership.from_dead(self.m, frozenset(self.dead) - back)
+
+
+def pod_membership(membership: Membership, pods: int) -> Membership:
+    """Pod-level liveness view of a flat pod-major membership.
+
+    The hierarchical topology orders its m = pods * local shards
+    pod-major (shard ``q * local + l`` is local slot ``l`` of pod ``q``,
+    matching a ``(pod, local)`` mesh's row-major device order).  A pod is
+    *active* iff any of its local shards is: a pod with one dead local
+    still produces a representative basis from its survivors (the masked
+    intra-pod psum), while a fully dead pod drops out of the inter-pod
+    ring exactly as a dead shard drops out of the flat ring.
+    """
+    pods = int(pods)
+    if pods < 1:
+        raise ValueError(f"pods must be >= 1, got {pods}")
+    if membership.m % pods:
+        raise ValueError(
+            f"membership over {membership.m} shards does not tile into "
+            f"{pods} equal pods"
+        )
+    local = membership.m // pods
+    return Membership(
+        active=tuple(
+            any(membership.active[q * local:(q + 1) * local])
+            for q in range(pods)
+        )
+    )
 
 
 def resolve_membership(

@@ -2,7 +2,7 @@
 
 A *topology* is the communication schedule a refinement round runs over a
 mesh axis; it is independent of ``backend=`` (which picks the compute
-path).  Three are registered:
+path).  Four are registered:
 
   * ``"psum"``   — broadcast shard 0's basis as the reference (one d·r
                    all-reduce), solve the r x r Procrustes problem locally
@@ -21,6 +21,15 @@ path).  Three are registered:
                    running V̄).  Communication overlaps the Gram phase and
                    the (m, d, r) stack is never materialized — O(d·r)
                    working set instead of the gather's O(m·d·r).
+  * ``"hier"``   — the two-level schedule (``repro.comm.hier``) over a
+                   2-D (pod, local) mesh: each round aligns locally, runs
+                   one masked f32 psum over the ``local`` axis (the fast
+                   intra-pod link) to form a pod-representative sum, then
+                   circulates only the p pod sums around a chunked
+                   ppermute ring over the ``pod`` axis (the slow
+                   inter-pod link, quantized at ``comm_bits``).  Per
+                   device the slow link carries O(p·d·r) ring-hop bits
+                   instead of the flat ring's O(m·d·r).
 
 ``"auto"`` resolves against the *resolved* backend to the pre-topology-
 subsystem pairing (gather under the pallas kernels, psum under XLA), so
@@ -59,10 +68,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import axis_size as _compat_axis_size
-from repro.comm.membership import Membership, resolve_membership
+from repro.comm.membership import Membership, pod_membership, resolve_membership
 from repro.comm.quantize import message_bits, resolve_comm_bits
 
 __all__ = [
+    "DATA_AXIS",
+    "POD_AXIS",
+    "MODEL_AXIS",
     "TOPOLOGIES",
     "TOPOLOGY_CHOICES",
     "resolve_topology",
@@ -74,7 +86,18 @@ __all__ = [
     "fan_projector_words",
 ]
 
-TOPOLOGIES = ("psum", "gather", "ring")
+# Single home of the mesh axis names (satellite of the hier topology:
+# the 2-D (pod, local) mesh, the collectives inside shard_map, and the
+# launch-layer mesh builders must all agree on these strings, so they
+# are constants here rather than literals scattered per module).  The
+# hierarchical topology's *local* axis is the ``DATA_AXIS`` — the same
+# axis every flat topology aggregates over — and its pod axis is
+# ``POD_AXIS``, matching ``make_production_mesh(multi_pod=True)``.
+DATA_AXIS = "data"
+POD_AXIS = "pod"
+MODEL_AXIS = "model"
+
+TOPOLOGIES = ("psum", "gather", "ring", "hier")
 
 # The single home of the *accepted-values* listing (registry entries plus
 # the "auto" switch).  ``resolve_topology``'s error message, both CLIs'
@@ -145,12 +168,30 @@ class CommCost:
     words: int
     bits: int
     hlo_bits: Dict[str, int]
+    # Two-level schedules only: the same hlo_bits, split by mesh level —
+    # {"intra": {kind: bits}, "inter": {kind: bits}}.  The inter level's
+    # "collective-permute" entry is *exactly* the slow-link ring-hop bill
+    # (no intra collective ever lowers to a permute), so the per-level
+    # prediction is HLO-verifiable even though compiled modules group
+    # bytes by collective kind, not by axis.  ``None`` for the flat
+    # topologies.
+    levels: Dict[str, Dict[str, int]] | None = None
 
     @property
     def hlo_bytes(self) -> Dict[str, int]:
         """Per-device operand bytes by collective kind (bits // 8) —
         directly comparable to ``hlo_analysis.collective_bytes``."""
         return {k: v // 8 for k, v in self.hlo_bits.items()}
+
+    @property
+    def level_bytes(self) -> Dict[str, Dict[str, int]] | None:
+        """Per-level ``hlo_bytes`` view (two-level topologies only)."""
+        if self.levels is None:
+            return None
+        return {
+            lv: {k: v // 8 for k, v in kinds.items()}
+            for lv, kinds in self.levels.items()
+        }
 
     @property
     def hlo_words(self) -> Dict[str, int]:
@@ -169,6 +210,7 @@ def comm_cost(
     ref_broadcast: bool = True,
     comm_bits=32,
     membership: Membership | None = None,
+    pods: int | None = None,
 ) -> CommCost:
     """Bits a topology moves for ``n_iter`` refinement rounds.
 
@@ -197,6 +239,22 @@ def comm_cost(
     This is deliberately distinct from *re-planning* at m', which prices
     the fresh m'-shard job (``plan_aggregation(m=m')``) the masked round
     is contractually equivalent to — see ``repro.runtime.elastic``.
+
+    ``topology="hier"`` additionally needs ``pods=p`` (m = p * local, the
+    2-D mesh's pod-major flattening).  Its bill is two-level and lands in
+    ``CommCost.levels``:
+
+      * **intra** (fast link, always exact f32): one d·r broadcast stage
+        of the reference plus one masked d·r psum per round, over the
+        ``local`` axis — skipped entirely when local == 1;
+      * **inter** (slow link, at ``comm_bits``): one wire-precision
+        broadcast stage of the reference, then n·(p'-1) ring-hop
+        messages over the ``pod`` axis (p' = active pods), plus — only
+        when a whole pod is dead — one exact f32 d·r resync broadcast
+        down from the first surviving pod, the "broadcast back down"
+        that re-replicates the answer mesh-wide.  A dead shard inside a
+        live pod costs nothing extra: the intra-pod all-reduce already
+        hands every local slot the pod sum.
     """
     t = resolve_topology(topology)
     bits_per = resolve_comm_bits(comm_bits)
@@ -206,6 +264,42 @@ def comm_cost(
     msg = message_bits(d, r, bits_per)
     bcast_w = basis if ref_broadcast else 0
     bcast_b = msg if ref_broadcast else 0
+    if t == "hier":
+        if pods is None:
+            raise ValueError("topology='hier' needs pods= (m = pods * local)")
+        p = int(pods)
+        if p < 1 or m % p:
+            raise ValueError(
+                f"pods={pods} does not tile m={m} into equal pods"
+            )
+        local = m // p
+        pmem = pod_membership(mem, p)
+        hops = pmem.m_active - 1 if p > 1 else 0
+        # Intra level: exact f32, skipped when the local axis is trivial.
+        intra_ar = (bcast_w + n * basis) * 32 if local > 1 else 0
+        # Inter level: the ref-broadcast stage and the per-round hops at
+        # wire precision, plus the degraded resync (exact f32, only when
+        # a whole pod is dead — its devices saw no ring traffic).
+        inter_bcast = bcast_b if p > 1 else 0
+        hop_bits = n * hops * msg
+        sync_w = 0 if (pmem.is_full or p == 1) else basis
+        inter_ar = inter_bcast + sync_w * 32
+        words = (
+            (bcast_w if local > 1 else 0)
+            + (bcast_w if p > 1 else 0)
+            + n * ((basis if local > 1 else 0) + hops * basis)
+            + sync_w
+        )
+        bits = intra_ar + inter_ar + hop_bits
+        levels = {
+            "intra": {"all-reduce": intra_ar},
+            "inter": {"all-reduce": inter_ar, "collective-permute": hop_bits},
+        }
+        return CommCost(
+            "hier", bits_per, words, bits,
+            {"all-reduce": intra_ar + inter_ar, "collective-permute": hop_bits},
+            levels=levels,
+        )
     if t == "psum":
         words = bcast_w + n * basis
         bits = bcast_b + n * msg

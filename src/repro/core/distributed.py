@@ -53,10 +53,13 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.comm import (
+    DATA_AXIS,
+    POD_AXIS,
     axis_size,
     broadcast_from,
     fused_ring_rounds,
     get_codec,
+    hier_rounds,
     resolve_topology,
     ring_rounds,
     wire_broadcast,
@@ -111,12 +114,14 @@ def procrustes_average_collective(
     comm_bits=None,
     plan=None,
     membership: Membership | None = None,
+    pod_axis: str | None = None,
 ) -> jax.Array:
     """Algorithm 1 (n_iter=1) / Algorithm 2 (n_iter>1) across a mesh axis.
 
     Args:
       v_local: (d, r) local leading eigenbasis on each shard.
-      axis_name: mesh axis playing the role of "machines".
+      axis_name: mesh axis playing the role of "machines" (the *local*
+        axis of the (pod, local) pair under ``topology="hier"``).
       n_iter: refinement rounds.  Each round costs one d·r psum under the
         psum topology, (m-1)·d·r ring-hop words under the ring topology,
         and is communication-free under gather (the stack is already
@@ -157,25 +162,54 @@ def procrustes_average_collective(
         contract: the masked round over the survivors is the round a
         fresh m'-shard job would run (see ``repro.comm.membership``).
         Planning paths (``plan="auto"`` / legacy provenance) price the
-        collective at m'.
+        collective at m'.  Under ``topology="hier"`` the mask is over
+        the flattened pod-major axis and applies per level
+        (``repro.comm.hier``).
+      pod_axis: second mesh axis of the 2-D (pod, local) pair — required
+        by (and only meaningful for) ``topology="hier"``, where the
+        machine count is ``axis_size(pod_axis) * axis_size(axis_name)``.
 
     Returns the replicated (d, r) Procrustes-fixed average.
     """
     from repro.plan.planner import resolve_plan
 
     d, r = v_local.shape
-    mem = resolve_membership(membership, axis_size(axis_name))
+    pods = axis_size(pod_axis) if pod_axis is not None else None
+    if topology == "hier" and pod_axis is None:
+        # The post-resolution coupling check below also covers this, but
+        # resolve_plan would name the missing ``pods=`` first; the actual
+        # fix for a collective caller is the missing mesh axis.
+        raise ValueError(
+            "topology='hier' and pod_axis= go together: the hierarchical "
+            "schedule needs the 2-D (pod, local) mesh axes "
+            "(got pod_axis=None)"
+        )
+    m_total = (pods or 1) * axis_size(axis_name)
+    mem = resolve_membership(membership, m_total)
     pl = resolve_plan(
         plan, m=mem.m, d=d, r=r, n_iter=n_iter,
         backend=backend, topology=topology, polar=polar, orth=orth,
         ring_chunk=ring_chunk, comm_bits=comm_bits,
-        ref_broadcast=(ref is None), membership=mem,
+        ref_broadcast=(ref is None), membership=mem, pods=pods,
     )
     backend, topo, polar, orth = pl.backend, pl.topology, pl.polar, pl.orth
     procrustes.resolve_polar(polar)
     resolve_orth(orth)
     resolve_topology(topo, backend)
+    if (topo == "hier") != (pod_axis is not None):
+        raise ValueError(
+            "topology='hier' and pod_axis= go together: the hierarchical "
+            "schedule needs the 2-D (pod, local) mesh axes, and no flat "
+            f"topology can span one (got topology={topo!r}, "
+            f"pod_axis={pod_axis!r})"
+        )
     codec = get_codec(pl.comm_bits)
+    if topo == "hier":
+        return hier_rounds(
+            v_local, ref, pod_axis=pod_axis, local_axis=axis_name,
+            n_iter=n_iter, backend=backend, polar=polar, orth=orth,
+            chunk=pl.ring_chunk, comm_bits=pl.comm_bits, membership=mem,
+        )
     if topo == "gather":
         # Coordinator topology, replicated on every shard: gather the m
         # local bases once (at wire precision — each shard encodes its own
@@ -197,6 +231,11 @@ def procrustes_average_collective(
             else:
                 gs = jax.lax.all_gather(scale, axis_name)  # (m, r)
                 vs = codec.decode(g, gs[:, None, :])
+            # Decoding lands in f32; the stacked rounds must run at the
+            # payload's dtype (a bf16 basis gathered at bf16 wire must
+            # not silently upcast the whole estimation to f32 — the same
+            # dtype-follows-payload rule the ring's chunk buffers obey).
+            vs = vs.astype(v_local.dtype)
         else:
             vs = jax.lax.all_gather(v_local, axis_name)  # (m, d, r)
         if not mem.is_full:
@@ -238,9 +277,11 @@ def procrustes_average_collective(
     )
     if ref is None:
         bkey = jax.random.fold_in(base_key, 0) if codec.stochastic else None
+        # The lossy tiers decode to f32; keep the reference (and hence
+        # every aligned product) at the payload's dtype.
         ref = wire_broadcast(
             v_local, axis_name, codec, src=mem.first_active, key=bkey
-        )
+        ).astype(v_local.dtype)
     alive = None
     if not mem.is_full:
         # Traced per-shard gate folded from the static mask: dead shards
@@ -296,12 +337,43 @@ def _local_pca_basis(
     return v
 
 
+def _hier_requested(topology, plan) -> bool:
+    """True when the caller asked for the hierarchical schedule (an
+    explicit ``topology="hier"`` pin or a resolved hier ``Plan``) — the
+    driver then aggregates over *both* mesh axes of the (pod, local)
+    pair instead of ``data_axis`` alone."""
+    from repro.plan.planner import Plan
+
+    return topology == "hier" or (
+        isinstance(plan, Plan) and plan.topology == "hier"
+    )
+
+
+def _agg_axes(mesh, data_axis: str, hier: bool):
+    """(shard axes, machine count, pod count) of the aggregation.
+
+    Flat topologies aggregate over ``data_axis`` only (a 'pod' axis, if
+    present, stays a batch-parallel bystander exactly as before); the
+    hierarchical topology spans (pod, local) and counts both.
+    """
+    if not hier:
+        return (data_axis,), mesh.shape[data_axis], None
+    if POD_AXIS not in mesh.axis_names:
+        raise ValueError(
+            f"topology='hier' needs a mesh with a {POD_AXIS!r} axis "
+            f"(got axes {tuple(mesh.axis_names)}); build one with "
+            "repro.launch.mesh.make_aggregation_mesh(pods=...)"
+        )
+    pods = mesh.shape[POD_AXIS]
+    return (POD_AXIS, data_axis), pods * mesh.shape[data_axis], pods
+
+
 def distributed_pca(
     samples: jax.Array,
     mesh: jax.sharding.Mesh,
     r: int,
     *,
-    data_axis: str = "data",
+    data_axis: str = DATA_AXIS,
     n_iter: int = 1,
     solver: str = "eigh",
     iters: int = 30,
@@ -329,15 +401,24 @@ def distributed_pca(
     covariance stage — and passed to the collective verbatim.
     ``membership`` masks dead shards out of the aggregation (the
     collective output stays mesh-replicated, so the returned row is valid
-    whichever shards died).  Returns the (d, r) estimate.
+    whichever shards died).
+
+    ``topology="hier"`` (pinned, or via a hier ``Plan``) expects a 2-D
+    ``(pod, data)`` mesh — ``repro.launch.mesh.make_aggregation_mesh`` —
+    and shards the samples over both axes pod-major, so ``membership``
+    then describes all pods*local machines in that order.  Returns the
+    (d, r) estimate.
     """
     from repro.plan.planner import resolve_plan
 
-    mem = resolve_membership(membership, mesh.shape[data_axis])
+    hier = _hier_requested(topology, plan)
+    axes, m, pods = _agg_axes(mesh, data_axis, hier)
+    mem = resolve_membership(membership, m)
     pl = resolve_plan(
         plan, m=mem.m, d=samples.shape[-1], r=r,
         n_iter=n_iter, backend=backend, topology=topology,
         polar=polar, orth=orth, comm_bits=comm_bits, membership=mem,
+        pods=pods,
     )
 
     def shard_fn(x_shard: jax.Array) -> jax.Array:
@@ -346,14 +427,15 @@ def distributed_pca(
         )
         out = procrustes_average_collective(
             v, axis_name=data_axis, n_iter=n_iter, plan=pl, membership=mem,
+            pod_axis=POD_AXIS if hier else None,
         )
         return out[None]  # keep a sharded leading axis; identical on every shard
 
-    spec_in = P(data_axis, *(None,) * (samples.ndim - 1))
+    spec_in = P(axes, *(None,) * (samples.ndim - 1))
     fn = jax.jit(
         shard_map(
             shard_fn, mesh=mesh, in_specs=spec_in,
-            out_specs=P(data_axis, None, None), check_vma=False
+            out_specs=P(axes, None, None), check_vma=False
         )
     )
     stacked = fn(samples)
@@ -365,7 +447,7 @@ def distributed_pca_from_covs(
     mesh: jax.sharding.Mesh,
     r: int,
     *,
-    data_axis: str = "data",
+    data_axis: str = DATA_AXIS,
     n_iter: int = 1,
     solver: str = "eigh",
     iters: int = 30,
@@ -382,16 +464,19 @@ def distributed_pca_from_covs(
     This is the paper's abstract setting (each machine holds a noisy X̂ⁱ),
     useful when the local matrices are not covariances (e.g. quadratic
     sensing's D_N, HOPE proximity matrices).  ``plan`` / ``comm_bits`` /
-    ``membership`` as in ``distributed_pca`` (resolved once at the driver
-    level).
+    ``membership`` / ``topology="hier"`` as in ``distributed_pca``
+    (resolved once at the driver level).
     """
     from repro.plan.planner import resolve_plan
 
-    mem = resolve_membership(membership, mesh.shape[data_axis])
+    hier = _hier_requested(topology, plan)
+    axes, m, pods = _agg_axes(mesh, data_axis, hier)
+    mem = resolve_membership(membership, m)
     pl = resolve_plan(
         plan, m=mem.m, d=covs.shape[-1], r=r,
         n_iter=n_iter, backend=backend, topology=topology,
         polar=polar, orth=orth, comm_bits=comm_bits, membership=mem,
+        pods=pods,
     )
 
     def shard_fn(cov_shard: jax.Array) -> jax.Array:
@@ -400,6 +485,7 @@ def distributed_pca_from_covs(
         v, _ = local_eigenbasis(cov, r, method=solver, iters=iters)
         out = procrustes_average_collective(
             v, axis_name=data_axis, n_iter=n_iter, plan=pl, membership=mem,
+            pod_axis=POD_AXIS if hier else None,
         )
         return out[None]
 
@@ -407,8 +493,8 @@ def distributed_pca_from_covs(
         shard_map(
             shard_fn,
             mesh=mesh,
-            in_specs=P(data_axis, None, None),
-            out_specs=P(data_axis, None, None),
+            in_specs=P(axes, None, None),
+            out_specs=P(axes, None, None),
             check_vma=False,
         )
     )

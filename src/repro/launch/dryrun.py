@@ -317,6 +317,7 @@ def dryrun_paper_pca(
     orth: Optional[str] = None, topology: Optional[str] = None,
     comm_bits=None, plan=None, explain: bool = False, calibration=None,
     plan_device: Optional[str] = None, drop_shards: Optional[str] = None,
+    pods: Optional[int] = None,
 ):
     """Dry-run the paper's own workload (distributed PCA, Algorithm 2).
 
@@ -348,17 +349,45 @@ def dryrun_paper_pca(
     the planner prices the survivor count, and the cost-model prediction
     carries the masked wire (the ring genuinely compiles fewer hops —
     the measured HLO breakdown shows it next to the prediction).
+
+    ``topology="hier"`` needs a mesh with a 'pod' axis — either
+    ``multi_pod=True`` (the production shape) or an explicit ``pods=p``
+    (a bare (p, n/p) aggregation mesh over the placeholder devices).
+    The aggregation then spans pod x data machines, the record carries
+    the two-level (intra/inter) byte prediction, and ``drop_shards``
+    indexes the flattened pod-major machine axis — so a whole-pod drop
+    exercises the ring-skips-the-pod path.
     """
     from repro import plan as planlib
-    from repro.comm import Membership, comm_cost
+    from repro.comm import DATA_AXIS, POD_AXIS, Membership, comm_cost
     from repro.configs.paper_pca import CONFIG as pcfg
     from repro.core.distributed import distributed_pca
 
-    mesh = _mesh_for(multi_pod, device_count)
+    if pods:
+        n = len(jax.devices())
+        if n % int(pods):
+            raise ValueError(f"--pods {pods} does not tile {n} devices")
+        mesh = make_mesh((int(pods), n // int(pods)), (POD_AXIS, DATA_AXIS))
+    else:
+        mesh = _mesh_for(multi_pod, device_count)
     chips = mesh.size
     n_data = mesh.shape["data"] * (mesh.shape.get("pod", 1))
-    # The aggregation collective runs over the "data" axis only.
-    m_agg = mesh.shape["data"]
+    hier = topology == "hier" or (
+        isinstance(plan, planlib.Plan) and plan.topology == "hier"
+    )
+    if hier:
+        if POD_AXIS not in mesh.axis_names:
+            raise ValueError(
+                "--topology hier needs --multi-pod (a mesh with a "
+                f"{POD_AXIS!r} axis)"
+            )
+        # The hier aggregation spans both axes (pod-major machine order).
+        agg_pods = mesh.shape[POD_AXIS]
+        m_agg = agg_pods * mesh.shape[DATA_AXIS]
+    else:
+        # Flat collectives run over the "data" axis only.
+        agg_pods = None
+        m_agg = mesh.shape[DATA_AXIS]
     mem = None
     if drop_shards:
         mem = Membership.from_dead(
@@ -368,19 +397,20 @@ def dryrun_paper_pca(
         plan, m=m_agg, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter,
         backend=backend, topology=topology, polar=polar, orth=orth,
         comm_bits=comm_bits, calibration=calibration,
-        device_kind=plan_device, membership=mem,
+        device_kind=plan_device, membership=mem, pods=agg_pods,
     )
     if explain:
         _, table = planlib.explain(
             m=m_agg, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter,
             backend=backend, topology=topology, polar=polar, orth=orth,
             comm_bits=comm_bits, calibration=calibration, plan=pl,
-            device_kind=plan_device,
+            device_kind=plan_device, pods=agg_pods,
         )
         print(table)
     topo = pl.topology
     cost = comm_cost(topo, m=m_agg, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter,
-                     comm_bits=pl.comm_bits, membership=mem)
+                     comm_bits=pl.comm_bits, membership=mem,
+                     pods=agg_pods if topo == "hier" else None)
     samples_like = jax.ShapeDtypeStruct(
         (n_data * pcfg.n_per_shard, pcfg.d), jnp.float32
     )
@@ -393,6 +423,7 @@ def dryrun_paper_pca(
         "polar": pl.polar,
         "orth": pl.orth,
         "topology": topo,
+        "pods": pl.pods,
         "comm_bits": pl.comm_bits,
         "plan_source": pl.source,
         "membership": "full" if mem is None else f"dead={list(mem.dead)}",
@@ -406,6 +437,14 @@ def dryrun_paper_pca(
         },
         "mesh": {"shape": list(mesh.shape.values()), "axes": list(mesh.axis_names)},
     }
+    if cost.level_bytes is not None:
+        # Two-level schedule: the per-link split the planner priced
+        # (the inter level's collective-permute entry is the slow-link
+        # hop bill, directly HLO-verifiable).
+        record["predicted_collective_bytes_by_level"] = {
+            lv: {k: v for k, v in kinds.items() if v}
+            for lv, kinds in cost.level_bytes.items()
+        }
     t0 = time.time()
 
     def job(samples):
@@ -466,7 +505,13 @@ def main():
     ap.add_argument("--topology", default="auto", choices=TOPOLOGY_CHOICES,
                     help="communication schedule for --paper-pca "
                          "(repro.comm); the record carries the cost-model "
-                         "prediction next to the measured HLO bytes")
+                         "prediction next to the measured HLO bytes; "
+                         "'hier' needs a pod axis (--multi-pod or --pods)")
+    ap.add_argument("--pods", type=int, default=None,
+                    help="with --paper-pca --topology hier: build a bare "
+                         "(pods, n/pods) 2-D aggregation mesh instead of "
+                         "the production mesh; the record carries the "
+                         "per-level (intra/inter) byte prediction")
     ap.add_argument("--comm-bits", default=None, choices=COMM_BITS_CHOICES,
                     help="wire precision of the --paper-pca collectives "
                          "(repro.comm.quantize); the record carries the "
@@ -572,7 +617,8 @@ def main():
                                        plan="auto" if args.plan == "auto" else None,
                                        explain=args.explain, calibration=cal,
                                        plan_device=args.plan_device,
-                                       drop_shards=args.drop_shards)
+                                       drop_shards=args.drop_shards,
+                                       pods=args.pods)
             else:
                 rec = dryrun_cell(
                     arch, shape, multi_pod=mp, eigen=args.eigen,

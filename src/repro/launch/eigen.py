@@ -36,8 +36,9 @@ from repro.core import (
     naive_average,
     procrustes_fix_average,
 )
+from repro.comm.topology import DATA_AXIS, POD_AXIS
 from repro.data import synthetic as syn
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_aggregation_mesh, make_host_mesh
 
 log = logging.getLogger("repro.eigen")
 
@@ -62,23 +63,43 @@ def run(
     explain: bool = False,
     calibration=None,
     fail_at: str | None = None,
+    pods: int | None = None,
 ):
     from repro import plan as planlib
 
-    mesh = mesh or make_host_mesh(model=1)
-    m = mesh.shape["data"]
+    # The hier topology runs over a 2-D (pod, local) mesh; everything
+    # else over the host mesh's flat data axis.  The two flags go
+    # together so the mesh shape and the schedule can never disagree.
+    if (topology == "hier") != (pods is not None):
+        raise ValueError(
+            "--topology hier and --pods go together (the hierarchical "
+            f"schedule needs the 2-D mesh; got topology={topology!r}, "
+            f"pods={pods!r})"
+        )
+    if topology == "hier":
+        if fail_at:
+            raise ValueError(
+                "--fail-at composes with the flat topologies only for now "
+                "(the elastic runtime re-plans at the survivor count, "
+                "which need not tile into pods)"
+            )
+        mesh = mesh or make_aggregation_mesh(pods=pods)
+        m = mesh.shape[POD_AXIS] * mesh.shape[DATA_AXIS]
+    else:
+        mesh = mesh or make_host_mesh(model=1)
+        m = mesh.shape[DATA_AXIS]
     # One resolution for the whole job: the collective, the shard-local
     # covariance backend, and the printed table all see the same Plan.
     pl = planlib.resolve_plan(
         plan, m=m, d=d, r=r, n_iter=n_iter, backend=backend,
         topology=topology, polar=polar, orth=orth, comm_bits=comm_bits,
-        calibration=calibration,
+        calibration=calibration, pods=pods,
     )
     if explain:
         _, table = planlib.explain(
             m=m, d=d, r=r, n_iter=n_iter, backend=backend,
             topology=topology, polar=polar, orth=orth, comm_bits=comm_bits,
-            calibration=calibration, plan=pl,
+            calibration=calibration, plan=pl, pods=pods,
         )
         print(table)
     key = jax.random.PRNGKey(seed)
@@ -128,6 +149,7 @@ def run(
         "polar": pl.polar,
         "orth": pl.orth,
         "topology": pl.topology,
+        "pods": pl.pods,
         "ring_chunk": pl.ring_chunk,
         "comm_bits": pl.comm_bits,
         "plan_source": pl.source,
@@ -188,9 +210,16 @@ def main():
                          "all-gather, or the overlapped ring (with "
                          "--backend pallas --polar newton-schulz --orth "
                          "cholesky-qr2 the ring hops fuse into the "
-                         "one-launch kernel round); auto keeps the "
-                         "historical backend pairing (or defers to "
-                         "the planner under --plan auto)")
+                         "one-launch kernel round); 'hier' is the "
+                         "two-level (pod, local) schedule and needs "
+                         "--pods; auto keeps the historical backend "
+                         "pairing (or defers to the planner under "
+                         "--plan auto)")
+    ap.add_argument("--pods", type=int, default=None,
+                    help="pod count of the 2-D (pods, m/pods) aggregation "
+                         "mesh for --topology hier: intra-pod psum on the "
+                         "fast link, a p-hop ring on the slow inter-pod "
+                         "link (quantized by --comm-bits; intra stays f32)")
     ap.add_argument("--comm-bits", default=None, choices=COMM_BITS_CHOICES,
                     help="wire precision of the aggregation collectives "
                          "(repro.comm.quantize): 32 exact, 16 bf16 cast, "
@@ -230,7 +259,7 @@ def main():
         solver=args.solver, backend=args.backend, polar=args.polar,
         orth=args.orth, topology=args.topology, comm_bits=args.comm_bits,
         plan=plan, explain=args.explain, calibration=cal,
-        fail_at=args.fail_at,
+        fail_at=args.fail_at, pods=args.pods,
     )
     for k, v in stats.items():
         print(f"{k}: {v}")

@@ -16,13 +16,17 @@ from typing import Optional, Tuple
 import jax
 
 from repro import compat
+from repro.comm.topology import DATA_AXIS, MODEL_AXIS, POD_AXIS
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """The target deployment mesh: one v5e pod slice (16 x 16 = 256 chips),
     or two pods (2 x 16 x 16 = 512 chips) with a leading 'pod' axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axes = (
+        (POD_AXIS, DATA_AXIS, MODEL_AXIS)
+        if multi_pod else (DATA_AXIS, MODEL_AXIS)
+    )
     return compat.make_mesh(shape, axes)
 
 
@@ -48,10 +52,33 @@ def make_host_mesh(
             model = 1
     data = data or (n // model)
     assert data * model == n, (data, model, n)
-    return compat.make_mesh((data, model), ("data", "model"))
+    return compat.make_mesh((data, model), (DATA_AXIS, MODEL_AXIS))
+
+
+def make_aggregation_mesh(
+    m: Optional[int] = None, *, pods: Optional[int] = None
+) -> jax.sharding.Mesh:
+    """The mesh the aggregation collectives run over.
+
+    Flat (``pods=None``): a 1-D ``(m,)`` mesh over ``DATA_AXIS`` — every
+    flat topology's shape.  Hierarchical (``pods=p``): the 2-D
+    ``(p, m // p)`` mesh over ``(POD_AXIS, DATA_AXIS)`` that
+    ``topology="hier"`` requires, pod-major so the flattened device order
+    matches ``Membership``'s shard numbering (shard q·local + l is local
+    slot l of pod q).  ``m`` defaults to every device this process sees.
+    """
+    m = m or len(jax.devices())
+    if pods is None:
+        return compat.make_mesh((m,), (DATA_AXIS,))
+    pods = int(pods)
+    if pods < 1 or m % pods:
+        raise ValueError(
+            f"pods={pods} does not tile m={m} into equal pods"
+        )
+    return compat.make_mesh((pods, m // pods), (POD_AXIS, DATA_AXIS))
 
 
 def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
     """The axes carrying batch parallelism ('pod' included when present)."""
     names = mesh.axis_names
-    return tuple(a for a in ("pod", "data") if a in names)
+    return tuple(a for a in (POD_AXIS, DATA_AXIS) if a in names)

@@ -22,17 +22,18 @@ import jax
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.comm.topology import DATA_AXIS, MODEL_AXIS
 from repro.launch.mesh import data_axes
 from repro.models.config import ModelConfig
 
 # logical name -> preferred mesh axis (single-axis entries; 'batch' special)
 DEFAULT_RULES: Dict[str, str] = {
-    "vocab": "model",
-    "heads": "model",
-    "kv_heads": "model",
-    "mlp": "model",
-    "experts": "model",
-    "embed": "data",  # FSDP; dropped when cfg.fsdp is False
+    "vocab": MODEL_AXIS,
+    "heads": MODEL_AXIS,
+    "kv_heads": MODEL_AXIS,
+    "mlp": MODEL_AXIS,
+    "experts": MODEL_AXIS,
+    "embed": DATA_AXIS,  # FSDP; dropped when cfg.fsdp is False
 }
 
 
@@ -43,14 +44,14 @@ def rules_for(cfg: Optional[ModelConfig], mesh) -> Dict[str, Any]:
     if cfg is not None and getattr(cfg, "serve_ep_over_data", False):
         # Serving layout (§Perf): experts across 'data' (full EP sharding
         # without FSDP all-gathers), dense TP dims stay on 'model'.
-        rules["experts"] = "data"
+        rules["experts"] = DATA_AXIS
         rules.pop("embed", None)
     if cfg is not None and getattr(cfg, "serve_mlp_over_data", False):
         # Serving layout v2 (§Perf B8): EP(model) x expert-ff(data) — the
         # 1T MoE's expert weights shard over BOTH axes (fits 16 GB HBM)
         # and stay stationary; the ff contraction psums a tiny buffer.
-        rules["experts"] = "model"
-        rules["mlp"] = "data"
+        rules["experts"] = MODEL_AXIS
+        rules["mlp"] = DATA_AXIS
         rules.pop("embed", None)
     rules = {k: v for k, v in rules.items() if v in mesh.axis_names}
     return rules
@@ -150,9 +151,9 @@ def cache_shardings(cache_like, cfg: ModelConfig, mesh):
     batch_axis = da if len(da) > 1 else da[0]
     rules = {
         "batch": batch_axis,
-        "kv_heads": "model",
-        "heads": "model",
-        "mlp": "model",
+        "kv_heads": MODEL_AXIS,
+        "heads": MODEL_AXIS,
+        "mlp": MODEL_AXIS,
     }
 
     def spec(v, a):

@@ -109,7 +109,8 @@ MIN_RING_CHUNK = 256
 
 
 def choose_ring_chunk(
-    d: int, r: int, device: Optional[DeviceModel] = None
+    d: int, r: int, device: Optional[DeviceModel] = None,
+    *, bw: Optional[float] = None,
 ) -> int:
     """The d·r-vs-per-hop-latency rule for the ring's chunk size.
 
@@ -117,14 +118,20 @@ def choose_ring_chunk(
     transfer; below the link's latency-bandwidth product the hop is
     latency-bound and further chunking only adds hops.  So the chunk is
     the smallest row count whose payload covers that product —
-    ``ceil(coll_latency · net_bw / (4 r))`` rows — floored at
+    ``ceil(coll_latency · bw / (4 r))`` rows — floored at
     ``MIN_RING_CHUNK`` (keep several chunks in flight for the pipeline
     to overlap at large d) and capped at ``d`` (a basis smaller than the
     product ships as one transfer per hop).
+
+    ``bw`` overrides the link bandwidth the rule prices against; the
+    default is the flat ring's ``device.net_bw``.  The hierarchical
+    topology's inter-pod ring passes ``bw=device.dcn_bw`` — the slow
+    link it actually rides — which grows the chunk on a slow fabric
+    (fewer, fuller transfers per hop).
     """
     device = device or device_model("cpu")
     latency_rows = math.ceil(
-        device.coll_latency_s * device.net_bw / (4.0 * max(r, 1))
+        device.coll_latency_s * (bw or device.net_bw) / (4.0 * max(r, 1))
     )
     return max(1, min(d, max(latency_rows, MIN_RING_CHUNK)))
 
@@ -199,6 +206,11 @@ class Plan:
     orth: str
     ring_chunk: int
     comm_bits: int = 32  # wire precision: part of the program, so compared
+    # Pod count of the 2-D (pod, local) mesh — nonzero iff topology is
+    # "hier" (it changes the traced program, so it is compared).  Flat
+    # plans keep 0 even when planned with ``pods=`` given, so a flat
+    # winner on a multi-pod mesh hashes identically to the 1-D plan.
+    pods: int = 0
     words: int = dataclasses.field(default=0, compare=False)
     bits: int = dataclasses.field(default=0, compare=False)
     flops: float = dataclasses.field(default=0.0, compare=False)
@@ -235,6 +247,7 @@ def score_cells(
     ref_broadcast: bool = True,
     context: str = "collective",
     calibration: Optional[Calibration] = None,
+    pods: Optional[int] = None,
 ) -> List[CellScore]:
     """Score every cell of the cube compatible with the given pins.
 
@@ -246,6 +259,14 @@ def score_cells(
     ``context="stacked"`` scores the already-gathered form (topology
     fixed, zero communication, wire precision moot).  Returns cells
     sorted by (feasibility, predicted seconds, enumeration order).
+
+    ``pods`` declares the physical mesh a 2-D (pods, m/pods) shape.  It
+    unlocks the "hier" cells (absent from the enumeration otherwise —
+    hier cannot run on a 1-D mesh) and re-prices every *flat* cell's
+    wire at ``device.dcn_bw``: a flat collective over a multi-pod mesh
+    crosses the slow fabric, that is the hier trade being scored.  With
+    ``dcn_bw == ici_bw`` (every pre-split model) the flat re-pricing is
+    byte-identical, so existing golden plans do not move.
     """
     if context not in ("collective", "stacked"):
         raise ValueError(f"context must be collective|stacked, got {context!r}")
@@ -260,8 +281,26 @@ def score_cells(
     pin_t = _validate_pin(topology, "topology", TOPOLOGIES)
     pin_p = _validate_pin(polar, "polar", POLAR_METHODS)
     pin_o = _validate_pin(orth, "orth", ORTH_METHODS)
+    if pods is not None:
+        pods = int(pods)
+        if pods < 1 or (m >= 1 and m % pods):
+            raise ValueError(
+                f"pods={pods} does not tile m={m} into equal pods"
+            )
+    if pin_t == "hier" and (pods is None or context == "stacked"):
+        raise ValueError(
+            "topology='hier' needs pods= (a 2-D (pod, local) mesh) and "
+            "the collective context"
+        )
     backends = (pin_b,) if pin_b else BACKENDS_CONCRETE
-    topos = (pin_t,) if pin_t else (("gather",) if context == "stacked" else TOPOLOGIES)
+    if pin_t:
+        topos = (pin_t,)
+    elif context == "stacked":
+        topos = ("gather",)
+    elif pods is not None:
+        topos = TOPOLOGIES
+    else:
+        topos = tuple(t for t in TOPOLOGIES if t != "hier")
     polars = (pin_p,) if pin_p else POLAR_METHODS
     orths = (pin_o,) if pin_o else ORTH_METHODS
     if comm_bits == "auto" and context == "collective":
@@ -283,6 +322,7 @@ def score_cells(
                             context=context,
                             backend_pinned=pin_b is not None,
                             topology_pinned=pin_t is not None,
+                            pods=pods,
                         ))
     # Stable sort: feasible first, then cheapest; enumeration order
     # breaks exact ties.
@@ -306,10 +346,19 @@ def _score_one(
     context: str,
     backend_pinned: bool,
     topology_pinned: bool,
+    pods: Optional[int] = None,
 ) -> CellScore:
     n = max(n_iter, 1)
     basis = d * r
-    chunk = ring_chunk if ring_chunk else choose_ring_chunk(d, r, device)
+    hier = t == "hier"
+    n_pods = int(pods) if (hier and pods) else 0
+    n_local = m // n_pods if n_pods else 0
+    # The hier cell's ring rides the DCN, so its chunk is sized against
+    # that link's latency-bandwidth product; flat rings keep the ICI rule
+    # (their execution path never sees the pod split).
+    chunk = ring_chunk if ring_chunk else choose_ring_chunk(
+        d, r, device, bw=device.dcn_bw if hier else None
+    )
     nchunks = len(chunk_spans(d, chunk))
     on_tpu = device.kind == "tpu"
     # The fully fused one-launch round exists on the stacked form
@@ -355,28 +404,44 @@ def _score_one(
         notes.append("int8 psum overflow headroom needs m <= 126")
 
     # ---- communication ---------------------------------------------------
+    intra_bytes = inter_bytes = 0.0
     if context == "stacked":
         words, bits, wire_bytes, colls = 0, 0, 0.0, 0
     else:
         cost = comm_cost(
             t, m=m, d=d, r=r, n_iter=n, ref_broadcast=ref_broadcast,
-            comm_bits=cb,
+            comm_bits=cb, pods=n_pods if hier else None,
         )
         words = cost.words
         bits = cost.bits
         wire_bytes = float(sum(cost.hlo_bytes.values()))
         bcast = 1 if ref_broadcast else 0
-        colls = {
-            "psum": bcast + n,
-            "gather": 1,
-            "ring": bcast + n * (m - 1),  # chunk permutes pipeline per hop
-        }[t]
-        if cb == 8:
-            # The f32[r] scale rides as a second small collective per
-            # message (psum's shared-scale pmax, gather's scale gather,
-            # the broadcast's scale psum); ring hops pipeline theirs with
-            # the chunk permutes, so only the broadcast doubles there.
-            colls += {"psum": bcast + n, "gather": 1, "ring": bcast}[t]
+        if hier:
+            # Two-level bill: each level priced against its own link
+            # below.  Collective count: the intra psum schedule (bcast
+            # stage + n rounds) when the local axis is real, plus the
+            # inter ring (bcast stage + n·(p-1) hops) when pods > 1;
+            # int8 only doubles the pod-level broadcast (hop scales
+            # pipeline with the chunk permutes, intra is always f32).
+            intra_bytes = float(sum(cost.level_bytes["intra"].values()))
+            inter_bytes = float(sum(cost.level_bytes["inter"].values()))
+            colls = ((bcast + n) if n_local > 1 else 0) + (
+                (bcast + n * (n_pods - 1)) if n_pods > 1 else 0
+            )
+            if cb == 8 and n_pods > 1:
+                colls += bcast
+        else:
+            colls = {
+                "psum": bcast + n,
+                "gather": 1,
+                "ring": bcast + n * (m - 1),  # chunk permutes pipeline per hop
+            }[t]
+            if cb == 8:
+                # The f32[r] scale rides as a second small collective per
+                # message (psum's shared-scale pmax, gather's scale gather,
+                # the broadcast's scale psum); ring hops pipeline theirs with
+                # the chunk permutes, so only the broadcast doubles there.
+                colls += {"psum": bcast + n, "gather": 1, "ring": bcast}[t]
         if fused_ring:
             # Hops are consumed inside the launch (the same (m-1)·d·r
             # wire volume, since an all-gather lowers to the ring's m-1
@@ -390,12 +455,26 @@ def _score_one(
         # A 1-shard axis puts nothing on the wire; every schedule
         # degenerates to the serial rounds.
         words_wire, colls = 0.0, 0
+        intra_bytes = inter_bytes = 0.0
     else:
         words_wire = wire_bytes
-    comm_s = words_wire / device.net_bw + colls * device.coll_latency_s
+    if hier:
+        intra_comm_s = intra_bytes / device.ici_bw
+        inter_comm_s = inter_bytes / device.dcn_bw
+        comm_s = intra_comm_s + inter_comm_s + colls * device.coll_latency_s
+    else:
+        # A flat collective on a declared multi-pod mesh crosses the slow
+        # fabric end to end, so ``pods=`` re-prices its whole wire at the
+        # DCN; without the split (dcn_bw == net_bw) this is the same
+        # number, so pod-less scoring is byte-identical.
+        intra_comm_s = inter_comm_s = 0.0
+        wire_bw = device.dcn_bw if pods is not None else device.net_bw
+        comm_s = words_wire / wire_bw + colls * device.coll_latency_s
 
     # ---- compute ---------------------------------------------------------
-    bases = 1 if (t == "psum" and context == "collective") else m
+    # hier computes like psum: one aligned basis per device per round,
+    # never a stacked operand.
+    bases = 1 if ((t == "psum" or hier) and context == "collective") else m
     flops = n * (
         4.0 * bases * d * r * r
         + bases * _polar_flops(p, r)
@@ -448,6 +527,10 @@ def _score_one(
         ops = n * (_BASE_STAGE_OPS + polar_ops + orth_ops)
         launches = 0
         lapack = n * (polar_lapack + orth_lapack)
+    if hier and n_pods > 1:
+        # The inter-pod hop loop dispatches a permute + accumulate per
+        # chunk per hop (no per-hop Procrustes — payloads are pre-aligned).
+        ops += n * (n_pods - 1) * 2 * nchunks
     if cb != 32 and context == "collective":
         # Encode/decode overhead of the wire codec (cast for bf16; scale +
         # stochastic round + convert for int8).  Small by design, but it
@@ -466,6 +549,14 @@ def _score_one(
         # (in-kernel, the hop DMA overlaps the previous hop's MXU work),
         # so comm and compute race instead of adding.
         total_s = max(comm_s, compute_s, memory_s) + latency_s
+    elif hier and m > 1:
+        # Only the slow-link ring overlaps compute (the hops have no
+        # compute dependency until the round's mean); the intra-pod psum
+        # gates the hops and the dispatches are serial, so both add.
+        total_s = (
+            max(inter_comm_s, compute_s, memory_s)
+            + intra_comm_s + colls * device.coll_latency_s + latency_s
+        )
     else:
         total_s = comm_s + max(compute_s, memory_s) + latency_s
 
@@ -496,6 +587,7 @@ def plan_aggregation(
     ref_broadcast: bool = True,
     context: str = "collective",
     calibration: Optional[Calibration] = None,
+    pods: Optional[int] = None,
 ) -> Plan:
     """Score the cube and return the cheapest feasible plan.
 
@@ -524,7 +616,7 @@ def plan_aggregation(
             backend=backend, topology=topo_pin, polar=polar, orth=orth,
             ring_chunk=ring_chunk, comm_bits=comm_bits,
             ref_broadcast=ref_broadcast,
-            context=context, calibration=calibration,
+            context=context, calibration=calibration, pods=pods,
         )
         return cells[0]  # sorted feasible-first, cheapest-first
 
@@ -545,7 +637,9 @@ def plan_aggregation(
     return Plan(
         backend=best.backend, topology=best.topology, polar=best.polar,
         orth=best.orth, ring_chunk=best.ring_chunk,
-        comm_bits=best.comm_bits, words=best.words, bits=best.bits,
+        comm_bits=best.comm_bits,
+        pods=(pods or 0) if best.topology == "hier" else 0,
+        words=best.words, bits=best.bits,
         flops=best.flops, total_s=best.total_s,
         device_kind=device_kind or _default_device_kind(),
         source="planner",
@@ -570,6 +664,7 @@ def resolve_plan(
     device_kind: Optional[str] = None,
     calibration: Optional[Calibration] = None,
     membership: Optional[Membership] = None,
+    pods: Optional[int] = None,
 ) -> Plan:
     """The single resolution funnel every aggregation entry point calls.
 
@@ -586,6 +681,12 @@ def resolve_plan(
     also re-checks the int8-psum overflow headroom at m' — while the
     legacy path's provenance fields price the *physical wire* via
     ``comm_cost(..., membership=)`` (what compiled HLO measures).
+
+    ``pods`` declares the 2-D (pods, m/pods) mesh (see ``score_cells``).
+    With pods given, planning paths score at the *physical* m — the pod
+    tiling is a physical-mesh property, and survivor counts need not
+    tile into pods — while membership still prices the legacy path's
+    provenance wire.
     """
     from repro.comm.topology import resolve_topology
     from repro.kernels.ops import resolve_backend
@@ -593,7 +694,7 @@ def resolve_plan(
     if isinstance(plan, Plan):
         return plan
     mem = resolve_membership(membership, m)
-    m_eff = mem.m_active
+    m_eff = mem.m_active if pods is None else m
     if plan is None:
         # Legacy defaults: an unspecified backend is the documented
         # "xla" default; "auto" resolves by the on-TPU rule as always.
@@ -604,6 +705,11 @@ def resolve_plan(
         )
         p = polar or "svd"
         o = orth or "qr"
+        if t == "hier" and (pods is None or pods < 1 or m % pods):
+            raise ValueError(
+                "topology='hier' needs pods= (m = pods * local); got "
+                f"pods={pods!r} for m={m}"
+            )
         if "auto" in (p, o) or comm_bits == "auto":
             # New-style "auto" polar/orth/comm_bits under the legacy
             # path: a single-knob plan with everything else pinned as
@@ -616,19 +722,21 @@ def resolve_plan(
                 ring_chunk=ring_chunk or DEFAULT_RING_CHUNK,
                 comm_bits=comm_bits,
                 ref_broadcast=ref_broadcast, context=context,
-                calibration=calibration,
+                calibration=calibration, pods=pods,
             )
         cb = resolve_comm_bits(comm_bits)
         if context == "collective":
             cost = comm_cost(t, m=m, d=d, r=r, n_iter=max(n_iter, 1),
                              ref_broadcast=ref_broadcast, comm_bits=cb,
-                             membership=mem)
+                             membership=mem,
+                             pods=pods if t == "hier" else None)
             cost_words, cost_bits = cost.words, cost.bits
         else:
             cost_words, cost_bits = 0, 0
         return Plan(
             backend=b, topology=t, polar=p, orth=o,
             ring_chunk=ring_chunk or DEFAULT_RING_CHUNK, comm_bits=cb,
+            pods=(pods or 0) if t == "hier" else 0,
             words=cost_words, bits=cost_bits, device_kind=device_kind or "",
             source="legacy",
         )
@@ -638,7 +746,7 @@ def resolve_plan(
             backend=backend, topology=topology, polar=polar, orth=orth,
             ring_chunk=ring_chunk, comm_bits=comm_bits,
             ref_broadcast=ref_broadcast,
-            context=context, calibration=calibration,
+            context=context, calibration=calibration, pods=pods,
         )
     raise ValueError(
         f"plan must be None, 'auto', or a Plan, got {plan!r}"
@@ -746,6 +854,7 @@ def explain(
     context: str = "collective",
     calibration: Optional[Calibration] = None,
     plan: Union[None, str, Plan] = "auto",
+    pods: Optional[int] = None,
 ) -> Tuple[Plan, str]:
     """Score the cube and render the table; returns (plan, table_text).
 
@@ -760,13 +869,14 @@ def explain(
         backend=backend, topology=topology, polar=polar, orth=orth,
         ring_chunk=ring_chunk, comm_bits=comm_bits,
         ref_broadcast=ref_broadcast,
-        context=context, calibration=calibration,
+        context=context, calibration=calibration, pods=pods,
     )
     cells = score_cells(**kwargs)
     chosen = resolve_plan(plan, **kwargs)
     header = (
         f"# plan[{chosen.source}]: m={m} d={d} r={r} n_iter={n_iter} "
-        f"device={device_kind or _default_device_kind()}"
+        + (f"pods={pods} " if pods else "")
+        + f"device={device_kind or _default_device_kind()}"
         + (f" calibration={calibration.source}" if calibration else "")
     )
     return chosen, header + "\n" + format_plan_table(cells, chosen)

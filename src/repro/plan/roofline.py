@@ -86,6 +86,25 @@ class DeviceModel:
     interpret_penalty: float
     hbm_cap_bytes: float
     vmem_cap_bytes: float = float(16 * 2**20)  # the 16 MiB/core envelope
+    # Split interconnect: ``net_bw`` is the fast intra-pod link (ICI /
+    # NVLink / shared memory — ``ici_bw`` below aliases it), while
+    # ``dcn_bw`` is the slow inter-pod fabric the hierarchical topology
+    # prices its pod-level ring against.  The 0.0 sentinel resolves to
+    # ``net_bw`` in ``__post_init__``, so every single-pod model (and
+    # every pre-split caller) keeps byte-identical behavior: with
+    # ``dcn_bw == ici_bw`` there is no slow link and the planner's split
+    # pricing collapses to the flat one.
+    dcn_bw: float = 0.0
+
+    def __post_init__(self):
+        if self.dcn_bw <= 0.0:
+            object.__setattr__(self, "dcn_bw", self.net_bw)
+
+    @property
+    def ici_bw(self) -> float:
+        """The fast intra-pod link — an alias of ``net_bw`` (the name the
+        split cost model uses opposite ``dcn_bw``)."""
+        return self.net_bw
 
     def calibrated(
         self,

@@ -299,13 +299,15 @@ def test_predictions_monotone_in_problem_size(topology, backend):
     """Within a fixed cell, bigger problems never predict fewer words or
     flops — the cost model has no sign errors hiding in a regime."""
     base = dict(m=8, d=512, r=16, n_iter=2)
+    # hier needs the 2-D mesh declared; pods=4 tiles both m=8 and m=16.
+    pods = 4 if topology == "hier" else None
 
     def cell(**kw):
         args = dict(base, **kw)
         [c] = score_cells(
             m=args["m"], d=args["d"], r=args["r"], n_iter=args["n_iter"],
             device_kind="tpu", backend=backend, topology=topology,
-            polar="newton-schulz", orth="cholesky-qr2",
+            polar="newton-schulz", orth="cholesky-qr2", pods=pods,
         )
         return c
 
@@ -413,7 +415,9 @@ def test_plan_auto_single_device_parity_all_pins():
     vs = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(3), (1, d, r)))[0]
     ser = refinement_rounds(vs, n_iter=2)
     mesh = make_mesh((1,), ("data",))
-    for topo in [None] + list(TOPOLOGIES):
+    # hier is excluded: it needs a 2-D (pod, local) mesh by construction,
+    # so a 1-D single-device pin can never run it.
+    for topo in [None] + [t for t in TOPOLOGIES if t != "hier"]:
         for backend in [None] + BACKENDS:
             fn = jax.jit(shard_map(
                 lambda v, b=backend, t=topo: procrustes_average_collective(
@@ -555,3 +559,63 @@ def test_dryrun_paper_pca_explain_words_match_model(tmp_path):
     assert rec["predicted_collective_bits"] == cost.bits
     assert rec["comm_bits"] == int(cbits)
     assert rec["topology"] == topo
+
+
+# ------------------------------------------- split-bandwidth roofline --
+
+
+def test_slow_dcn_flips_flat_ring_to_hier():
+    """Golden flip (DESIGN.md §2.4): at the paper-scale shape where the
+    gather stack is memory-infeasible and int8 prices psum out (the
+    headroom guard), the 1-D plan chooses the flat ring — and handing
+    the planner the 2-D (pods, local) mesh on a slow-DCN device flips
+    the choice to hier, whose inter-pod ring is the only wire on the
+    slow fabric.  The flat ring's cell is re-priced at ``dcn_bw`` in the
+    same enumeration, so the flip is apples-to-apples."""
+    import dataclasses
+
+    kw = dict(m=2048, d=65536, r=128, n_iter=1, comm_bits=8)
+    tpu = device_model("tpu")
+    flat = score_cells(device=tpu, **kw)
+    assert flat[0].topology == "ring"
+    slow = dataclasses.replace(tpu, dcn_bw=tpu.net_bw / 100)
+    assert slow.ici_bw == tpu.net_bw
+    cells = score_cells(device=slow, pods=64, **kw)
+    assert cells[0].topology == "hier"
+    ring = next(c for c in cells if c.topology == "ring" and c.feasible)
+    hier = cells[0]
+    # The ring crosses the slow fabric every hop; hier only (p-1) times.
+    assert ring.comm_s > 10 * hier.comm_s
+    # On the uniform-fabric device the flat ring's pricing is unchanged
+    # by pods= (dcn_bw == ici_bw): the re-pricing is byte-identical.
+    uniform = score_cells(device=tpu, pods=64, **kw)
+    ring_uniform = next(
+        c for c in uniform if c.topology == "ring" and c.feasible)
+    ring_flat = next(
+        c for c in flat if c.topology == "ring" and c.feasible)
+    assert ring_uniform == ring_flat
+
+
+def test_dcn_default_reproduces_golden_plans():
+    """``dcn_bw=ici_bw`` is behavior-preserving: an explicitly-split
+    device with ``dcn_bw == net_bw`` scores every cell of every golden
+    configuration byte-for-byte like the pre-split default (whose 0.0
+    sentinel resolves to ``net_bw``), pods given or not."""
+    import dataclasses
+
+    from repro.plan.roofline import DEVICE_MODELS
+
+    for dev in DEVICE_MODELS.values():
+        assert dev.dcn_bw == dev.net_bw  # the sentinel resolved
+    for kw in (
+        dict(m=8, d=512, r=16, n_iter=2, device_kind="tpu"),
+        dict(m=8, d=512, r=16, n_iter=2, device_kind="cpu"),
+        dict(m=2048, d=65536, r=128, n_iter=1, device_kind="tpu"),
+        dict(m=64, d=8192, r=128, n_iter=3, device_kind="tpu",
+             comm_bits="auto"),
+        dict(m=8, d=96, r=4, n_iter=2, device_kind="cpu", pods=4),
+    ):
+        dev = device_model(kw.pop("device_kind"))
+        split = dataclasses.replace(dev, dcn_bw=dev.net_bw)
+        assert score_cells(device=dev, **kw) == \
+            score_cells(device=split, **kw), kw

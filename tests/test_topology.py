@@ -50,7 +50,7 @@ BACKENDS = ["xla", "pallas"]
 
 
 def test_topologies_registry():
-    assert TOPOLOGIES == ("psum", "gather", "ring")
+    assert TOPOLOGIES == ("psum", "gather", "ring", "hier")
 
 
 def test_resolve_topology_explicit_is_backend_independent():
