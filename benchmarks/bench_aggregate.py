@@ -39,6 +39,11 @@ Record layout axes:
       cholesky-qr2) cell consumes its staged hops inside one pallas_call
       per round (DESIGN.md §3.3, new in v6) — a different program from
       the jnp ring hop loop, so it diffs and gates only against itself.
+  * ``workload`` — what the cell times (new in v8): "oneshot" for every
+      cell this module records; ``benchmarks.bench_stream`` records the
+      streaming service's "stream-refresh" (steady-state refresh: covs
+      and previous basis in) and "stream-query" (collective-free batched
+      projection) cells into the same schema.
 
 Timing discipline: jit + one warm-up call (compile time recorded
 separately), then ``reps`` timed calls each ending in
@@ -66,7 +71,7 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
-SCHEMA = "bench_aggregate/v7"
+SCHEMA = "bench_aggregate/v8"
 # v1 predates the ``orth=`` switch (upgraded with orth="qr"); v2 predates
 # the ``comm`` communication-topology axis (upgraded with the historical
 # backend pairing); v3 predates the ``bits`` wire-precision axis
@@ -77,13 +82,18 @@ SCHEMA = "bench_aggregate/v7"
 # plain jnp; the fused in-kernel ring rounds are new in v6); v6 predates
 # the ``pods`` mesh-shape axis (upgraded with 0 — every pre-v7 collective
 # cell ran over the flat 1-D data mesh; the hierarchical 2-D cells are
-# new in v7).  ``load`` upgrades all six.
+# new in v7); v7 predates the ``workload`` axis (upgraded with "oneshot"
+# — every pre-v8 cell timed the one-shot aggregation; the streaming
+# service's "stream-refresh" / "stream-query" cells, recorded by
+# ``benchmarks.bench_stream``, are new in v8).  ``load`` upgrades all
+# seven.
 SCHEMA_V1 = "bench_aggregate/v1"
 SCHEMA_V2 = "bench_aggregate/v2"
 SCHEMA_V3 = "bench_aggregate/v3"
 SCHEMA_V4 = "bench_aggregate/v4"
 SCHEMA_V5 = "bench_aggregate/v5"
 SCHEMA_V6 = "bench_aggregate/v6"
+SCHEMA_V7 = "bench_aggregate/v7"
 
 # Record keys that identify a configuration (the diff/check join key).
 # ``membership`` keys degraded-mesh cells ("full" | "dead=[k,..]"): a
@@ -96,10 +106,15 @@ SCHEMA_V6 = "bench_aggregate/v6"
 # gates only against itself.  ``pods`` keys the mesh shape of a
 # hierarchical cell (0 on every flat-mesh cell; p > 0 means the 2-D
 # (p, m/p) mesh of ``comm="hier"``) — a different collective schedule
-# per pod count, so each gates only against its own.
+# per pod count, so each gates only against its own.  ``workload`` keys
+# *what* the cell times ("oneshot" | "stream-refresh" | "stream-query",
+# new in v8): the streaming service's steady-state refresh (reference
+# supplied, covs pre-formed) and its collective-free query projection
+# are different programs from the one-shot aggregation, so each diffs
+# and gates only against its own kind.
 KEY_FIELDS = (
-    "topology", "comm", "pods", "bits", "membership", "kernel", "backend",
-    "polar", "orth", "m", "d", "r", "n_iter"
+    "workload", "topology", "comm", "pods", "bits", "membership", "kernel",
+    "backend", "polar", "orth", "m", "d", "r", "n_iter"
 )
 
 DEFAULT_COMMS = ("psum", "gather", "ring", "hier")
@@ -184,6 +199,7 @@ def bench_stacked(shapes, backends, polars, orths, *, n_iter: int, reps: int):
                         )
                     )
                     rec = {
+                        "workload": "oneshot",
                         "topology": "stacked", "comm": "-", "pods": 0,
                         "bits": 32,
                         "membership": "full", "kernel": "-",
@@ -285,6 +301,7 @@ def bench_collective(
                             )
                             kern = _kernel_cell(backend, comm, polar, orth)
                             rec = {
+                                "workload": "oneshot",
                                 "topology": "collective", "comm": comm,
                                 "pods": hier_pods if hier else 0,
                                 "bits": cb, "membership": "full",
@@ -381,6 +398,13 @@ def load(path: str) -> dict:
         # cells are new in v7), so every record upgrades to 0.
         for rec in doc.get("records", []):
             rec.setdefault("pods", 0)
+        doc["schema"] = SCHEMA_V7
+    if doc.get("schema") == SCHEMA_V7:
+        # v7 predates the ``workload`` axis: every pre-v8 cell timed the
+        # one-shot aggregation (the streaming service's refresh/query
+        # cells are new in v8), so every record upgrades to "oneshot".
+        for rec in doc.get("records", []):
+            rec.setdefault("workload", "oneshot")
         doc["schema"] = SCHEMA
     if doc.get("schema") != SCHEMA:
         raise ValueError(
@@ -389,7 +413,9 @@ def load(path: str) -> dict:
     return doc
 
 
-_KEY_DEFAULTS = {"membership": "full", "kernel": "-", "pods": 0}
+_KEY_DEFAULTS = {
+    "membership": "full", "kernel": "-", "pods": 0, "workload": "oneshot",
+}
 
 
 def _key(rec: dict):
@@ -399,23 +425,24 @@ def _key(rec: dict):
                  for k in KEY_FIELDS)
 
 
+def _fields(rec: dict) -> str:
+    """The key columns of one record, CSV — tolerant like ``_key`` so
+    pretty-printing/diffing an in-memory doc that predates an axis
+    renders its default instead of raising."""
+    return ",".join(str(v) for v in _key(rec))
+
+
 def pretty_print(doc: dict) -> None:
     meta = doc.get("meta", {})
     print(
         f"# {SCHEMA} | jax {meta.get('jax')} on {meta.get('platform')} "
         f"x{meta.get('device_count')} | {meta.get('timestamp')}"
     )
-    hdr = ("topology", "comm", "pods", "bits", "membership", "kernel",
-           "backend", "polar", "orth", "m", "d", "r", "n_iter", "mode",
-           "wall_us", "compile_s")
+    hdr = KEY_FIELDS + ("mode", "wall_us", "compile_s")
     print(",".join(hdr))
     for rec in sorted(doc["records"], key=_key):
         print(
-            f"{rec['topology']},{rec['comm']},{rec.get('pods', 0)},"
-            f"{rec['bits']},"
-            f"{rec['membership']},{rec['kernel']},"
-            f"{rec['backend']},{rec['polar']},{rec['orth']},"
-            f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
+            f"{_fields(rec)},"
             f"{rec['mode']},{rec['wall_us']:.1f},{rec['compile_s']:.2f}"
         )
 
@@ -434,8 +461,7 @@ def diff(old: dict, new: dict) -> None:
             f"({p_old!r} vs {p_new!r}); wall times are not comparable"
         )
     olds = {_key(r): r for r in old["records"]}
-    print("topology,comm,pods,bits,membership,kernel,backend,polar,orth,"
-          "m,d,r,n_iter,old_us,new_us,ratio")
+    print(",".join(KEY_FIELDS) + ",old_us,new_us,ratio")
     for rec in sorted(new["records"], key=_key):
         prev = olds.get(_key(rec))
         if prev is None:
@@ -445,14 +471,7 @@ def diff(old: dict, new: dict) -> None:
         else:
             status = f"{rec['wall_us'] / max(prev['wall_us'], 1e-9):.3f}"
         old_us = f"{prev['wall_us']:.1f}" if prev else "-"
-        print(
-            f"{rec['topology']},{rec['comm']},{rec.get('pods', 0)},"
-            f"{rec['bits']},"
-            f"{rec['membership']},{rec['kernel']},"
-            f"{rec['backend']},{rec['polar']},{rec['orth']},"
-            f"{rec['m']},{rec['d']},{rec['r']},{rec['n_iter']},"
-            f"{old_us},{rec['wall_us']:.1f},{status}"
-        )
+        print(f"{_fields(rec)},{old_us},{rec['wall_us']:.1f},{status}")
 
 
 def check(
@@ -485,8 +504,8 @@ def check(
       the same factor is invisible — run ``calibrate=False`` on
       same-machine sweeps to see it.
     * **group verdicts.**  The primary verdict is per *path group*
-      (topology, comm, pods, bits, membership, kernel) — the unit a code
-      change actually moves —
+      (workload, topology, comm, pods, bits, membership, kernel) — the
+      unit a code change actually moves —
       using the median calibrated ratio of the group's cells (backend /
       polar / orth / shape variants).  A noisy-neighbor episode hits a
       few arbitrary cells; a real path regression moves its whole group.
@@ -536,8 +555,8 @@ def check(
     }
     groups: dict = {}
     for rec, prev, ratio in matched:
-        g = (rec["topology"], rec["comm"], rec.get("pods", 0),
-             rec.get("bits", 32),
+        g = (rec.get("workload", "oneshot"), rec["topology"], rec["comm"],
+             rec.get("pods", 0), rec.get("bits", 32),
              rec.get("membership", "full"), rec.get("kernel", "-"))
         groups.setdefault(g, []).append(ratio / norms[rec["topology"]])
     regressions = [

@@ -13,6 +13,11 @@ The recorded aggregation sweep (``benchmarks/bench_aggregate.py`` ->
 ``--check-aggregate`` is the CI regression gate: it exits non-zero when any
 matching same-mode cell's median wall time regressed by more than
 ``--check-threshold`` (default 1.25x).
+
+The streaming-service sweep and its serving-economics gate live in
+``benchmarks/bench_stream.py`` (same v8 record schema, ``workload`` axis
+"stream-refresh"/"stream-query"); its records load through the same
+``--show-aggregate`` / ``--diff-aggregate`` paths.
 """
 
 import argparse

@@ -7,6 +7,11 @@ The switch is the same ``backend=`` vocabulary as the aggregation API
 ("xla" | "pallas" | "auto"), so ``backend="pallas"`` covers the full
 distributed-PCA pipeline: covariance -> local eigenbasis -> gather -> fused
 align.
+
+``gram_increment`` is the unnormalized building block (X^T X at a stated
+accumulation dtype) shared with the streaming accumulator
+(``repro.stream.accumulator``), so one-shot and chunked covariance follow
+the same dtype rule by construction.
 """
 
 from __future__ import annotations
@@ -14,22 +19,39 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["empirical_covariance"]
+__all__ = ["empirical_covariance", "gram_increment"]
+
+
+def gram_increment(x: jax.Array, *, dtype=jnp.float32) -> jax.Array:
+    """Unnormalized Gram X^T X of a (n, d) chunk, accumulated at ``dtype``.
+
+    The accumulation dtype never follows the payload down: a bf16 chunk is
+    upcast before the product, so streaming state stays exact-f32 (or f64
+    under x64) regardless of the wire dtype.  n may be 0 — the result is
+    then an exact (d, d) zero matrix.
+    """
+    acc = jnp.promote_types(jnp.dtype(dtype), jnp.float32)
+    xf = x.astype(acc)
+    return xf.T @ xf
 
 
 def empirical_covariance(x: jax.Array, *, backend: str = "xla") -> jax.Array:
-    """(1/n) X^T X for samples X of shape (n, d), accumulated in f32.
+    """(1/n) X^T X for samples X of shape (n, d), accumulated in >= f32.
 
     Args:
       x: (n, d) sample matrix (zero-mean assumed, per the paper).
       backend: "xla" (pure jnp), "pallas" (the ``repro.kernels.covariance``
         Gram kernel — compiled on TPU, interpret mode elsewhere), or "auto"
         (kernel on TPU, XLA elsewhere).
+
+    Accumulation dtype is ``promote_types(x.dtype, f32)``: bf16 payloads
+    accumulate in f32 (as before), while f64 inputs under x64 stay f64 so
+    the streaming oracle (``tests/test_stream.py``) can pin chunked
+    accumulation bit-for-bit against this one-shot path.
     """
     from repro.kernels import ops as kops
 
     n = x.shape[0]
     if kops.resolve_backend(backend) == "pallas":
         return kops.gram(x, use_kernel=True) / n
-    xf = x.astype(jnp.float32)
-    return (xf.T @ xf) / n
+    return gram_increment(x, dtype=x.dtype) / n

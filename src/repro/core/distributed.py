@@ -458,6 +458,7 @@ def distributed_pca_from_covs(
     comm_bits=None,
     plan=None,
     membership: Membership | None = None,
+    ref: jax.Array | None = None,
 ) -> jax.Array:
     """Same as ``distributed_pca`` but from pre-formed local matrices (m, d, d).
 
@@ -466,6 +467,14 @@ def distributed_pca_from_covs(
     sensing's D_N, HOPE proximity matrices).  ``plan`` / ``comm_bits`` /
     ``membership`` / ``topology="hier"`` as in ``distributed_pca``
     (resolved once at the driver level).
+
+    ``ref`` optionally supplies the (d, r) alignment reference instead of
+    the first active shard's basis — the streaming service passes its
+    previously served basis here so consecutive refreshes never flip sign
+    or rotation (``repro.stream.service``).  It enters the shard program
+    as a replicated argument, not a closure capture, so one traced
+    program serves every refresh, and the plan is priced with
+    ``ref_broadcast=False`` (no reference broadcast round on the wire).
     """
     from repro.plan.planner import resolve_plan
 
@@ -476,26 +485,37 @@ def distributed_pca_from_covs(
         plan, m=mem.m, d=covs.shape[-1], r=r,
         n_iter=n_iter, backend=backend, topology=topology,
         polar=polar, orth=orth, comm_bits=comm_bits, membership=mem,
-        pods=pods,
+        pods=pods, ref_broadcast=(ref is None),
     )
 
-    def shard_fn(cov_shard: jax.Array) -> jax.Array:
+    def shard_fn(cov_shard: jax.Array, ref_arg: jax.Array | None) -> jax.Array:
         # cov_shard: (m_local, d, d); m_local == 1 when m == mesh size.
         cov = jnp.mean(cov_shard, axis=0)
         v, _ = local_eigenbasis(cov, r, method=solver, iters=iters)
         out = procrustes_average_collective(
-            v, axis_name=data_axis, n_iter=n_iter, plan=pl, membership=mem,
-            pod_axis=POD_AXIS if hier else None,
+            v, axis_name=data_axis, n_iter=n_iter, ref=ref_arg, plan=pl,
+            membership=mem, pod_axis=POD_AXIS if hier else None,
         )
         return out[None]
 
+    if ref is None:
+        fn = jax.jit(
+            shard_map(
+                lambda c: shard_fn(c, None),
+                mesh=mesh,
+                in_specs=P(axes, None, None),
+                out_specs=P(axes, None, None),
+                check_vma=False,
+            )
+        )
+        return fn(covs)[0]
     fn = jax.jit(
         shard_map(
             shard_fn,
             mesh=mesh,
-            in_specs=P(axes, None, None),
+            in_specs=(P(axes, None, None), P(None, None)),
             out_specs=P(axes, None, None),
             check_vma=False,
         )
     )
-    return fn(covs)[0]
+    return fn(covs, ref)[0]

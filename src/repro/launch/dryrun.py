@@ -317,7 +317,7 @@ def dryrun_paper_pca(
     orth: Optional[str] = None, topology: Optional[str] = None,
     comm_bits=None, plan=None, explain: bool = False, calibration=None,
     plan_device: Optional[str] = None, drop_shards: Optional[str] = None,
-    pods: Optional[int] = None,
+    pods: Optional[int] = None, stream_steps: Optional[int] = None,
 ):
     """Dry-run the paper's own workload (distributed PCA, Algorithm 2).
 
@@ -357,6 +357,13 @@ def dryrun_paper_pca(
     the two-level (intra/inter) byte prediction, and ``drop_shards``
     indexes the flattened pod-major machine axis — so a whole-pod drop
     exercises the ring-skips-the-pod path.
+
+    ``stream_steps=N`` lowers the *streaming service* programs instead of
+    the one-shot job (``repro.stream``): the steady-state refresh (the
+    reference is supplied, so the prediction is ``comm_cost`` with
+    ``ref_broadcast=False``, amortized over the N-step cadence) and the
+    query path, whose measured collective bytes the record carries —
+    zero, by construction, for the replicated-matmul projection.
     """
     from repro import plan as planlib
     from repro.comm import DATA_AXIS, POD_AXIS, Membership, comm_cost
@@ -445,6 +452,58 @@ def dryrun_paper_pca(
             lv: {k: v for k, v in kinds.items() if v}
             for lv, kinds in cost.level_bytes.items()
         }
+    if stream_steps:
+        # Streaming-service lane: the steady-state refresh program (covs
+        # and previous basis in, next basis out) plus the query program.
+        from repro.stream import SubspaceService
+
+        svc = SubspaceService(
+            mesh, pcfg.d, pcfg.r, n_iter=pcfg.n_iter, cadence=stream_steps,
+            solver=pcfg.solver, iters=pcfg.solver_iters, plan=pl,
+            membership=mem,
+        )
+        s_cost = comm_cost(
+            topo, m=m_agg, d=pcfg.d, r=pcfg.r, n_iter=pcfg.n_iter,
+            comm_bits=pl.comm_bits, membership=mem, ref_broadcast=False,
+            pods=agg_pods if topo == "hier" else None,
+        )
+        record["kind"] = "eigen-stream"
+        record["stream_steps"] = stream_steps
+        record["predicted_collective_words"] = s_cost.words
+        record["predicted_collective_bits"] = s_cost.bits
+        record["predicted_collective_bytes"] = {
+            k: v for k, v in s_cost.hlo_bytes.items() if v
+        }
+        record["predicted_refresh_bits_per_step"] = s_cost.bits / stream_steps
+        covs_like = jax.ShapeDtypeStruct((m_agg, pcfg.d, pcfg.d), jnp.float32)
+        ref_like = jax.ShapeDtypeStruct((pcfg.d, pcfg.r), jnp.float32)
+        t0 = time.time()
+        lowered = svc.refresh_fn(with_ref=True).lower(covs_like, ref_like)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        record.update(_analyze(lowered, compiled, chips, t_lower, t_compile))
+        # The query path: batched projection onto the served basis.  Its
+        # HLO must carry zero collective bytes — the served basis is
+        # replicated and a refresh swaps it host-side (double buffer).
+        q_like = jax.ShapeDtypeStruct((1024, pcfg.d), jnp.float32)
+        q_compiled = svc.query_fn.lower(q_like, ref_like).compile()
+        q_coll = H.collective_bytes(q_compiled.as_text())
+        record["query_collective_breakdown"] = {
+            k: v for k, v in q_coll.items() if v
+        }
+        record["query_collective_bytes_per_device"] = float(
+            sum(q_coll.values())
+        )
+        if verbose:
+            print(
+                f"[dryrun] paper-pca-stream (steps={stream_steps}): OK "
+                f"chips={chips} compile={t_compile:.1f}s "
+                f"refresh_coll={record['collective_bytes_per_device']:.3e}B "
+                f"query_coll={record['query_collective_bytes_per_device']:.0f}B"
+            )
+        return record
     t0 = time.time()
 
     def job(samples):
@@ -536,6 +595,13 @@ def main():
                          "lower interpret-mode/opaque off-TPU).  Use "
                          "'tpu' to plan for the v5e target the roofline "
                          "prices")
+    ap.add_argument("--stream-steps", type=int, default=None, metavar="N",
+                    help="with --paper-pca: lower the streaming service's "
+                         "programs instead of the one-shot job "
+                         "(repro.stream) — the steady-state refresh "
+                         "(priced ref_broadcast=False, amortized over an "
+                         "N-step cadence) and the query path, whose "
+                         "measured collective bytes must be zero")
     ap.add_argument("--drop-shards", default=None, metavar="K[,K..]",
                     help="lower the degraded-mesh --paper-pca program "
                          "with these data-axis shards masked dead "
@@ -618,7 +684,8 @@ def main():
                                        explain=args.explain, calibration=cal,
                                        plan_device=args.plan_device,
                                        drop_shards=args.drop_shards,
-                                       pods=args.pods)
+                                       pods=args.pods,
+                                       stream_steps=args.stream_steps)
             else:
                 rec = dryrun_cell(
                     arch, shape, multi_pod=mp, eigen=args.eigen,

@@ -16,6 +16,11 @@ every cell's predicted communication words and wire bits (the verified
 terms, with the chosen cell marked.  ``--calibrate
 BENCH_aggregate.json`` refines the planner's latency/throughput
 constants from a recorded sweep on this machine.
+
+``--stream STEPS`` runs the same estimation as a *streaming* job
+(``repro.stream``): rows arrive in STEPS per-shard chunks, the service
+refreshes on a cadence with the previous basis as the Procrustes
+reference, and the report gains stream_* staleness/drift/refresh stats.
 """
 
 from __future__ import annotations
@@ -64,6 +69,8 @@ def run(
     calibration=None,
     fail_at: str | None = None,
     pods: int | None = None,
+    stream: int | None = None,
+    cadence: int | None = None,
 ):
     from repro import plan as planlib
 
@@ -110,8 +117,44 @@ def run(
     samples = syn.sample_gaussian(k2, factor, m * n_per_shard)
 
     report = None
+    svc = None
     t0 = time.perf_counter()
-    if fail_at:
+    if stream:
+        # Streaming lane: the same rows arrive in `stream` per-shard
+        # chunks through a SubspaceService (repro.stream) — refreshes on
+        # the cadence, previous basis as the alignment reference.  A
+        # --fail-at "shard:step" schedule composes: the service adopts
+        # the injector's membership each step (elastic refresh on death).
+        from repro.stream import SubspaceService
+
+        if n_per_shard % stream:
+            raise ValueError(
+                f"--stream {stream} must divide --n-per-shard "
+                f"{n_per_shard} (fixed-size chunks keep one compiled "
+                "update program)"
+            )
+        injector = None
+        if fail_at:
+            from repro.runtime.fault import FailureInjector
+
+            injector = FailureInjector(
+                fail_at=FailureInjector.parse_fail_spec(fail_at)
+            )
+        svc = SubspaceService(
+            mesh, d, r, n_iter=n_iter,
+            cadence=cadence or max(stream // 4, 1),
+            solver=solver, iters=iters, plan=pl, calibration=calibration,
+        )
+        chunk = n_per_shard // stream
+        xs3 = samples.reshape(m, n_per_shard, d)
+        for t in range(stream):
+            if injector is not None:
+                svc.set_membership(injector.membership_at(t, m))
+            svc.observe(xs3[:, t * chunk:(t + 1) * chunk, :])
+        if svc.stats["staleness"]:
+            svc.refresh()  # serve the full-data basis before reporting
+        v_dist = svc.basis
+    elif fail_at:
         # Elastic lane: a "shard:round,shard:round" kill schedule runs the
         # same estimation through repro.runtime.elastic — dead shards are
         # masked out of the collectives round by round, each membership
@@ -161,6 +204,18 @@ def run(
         "dist_local0": float(dist_2(vs[0], v1)),
         "wall_s": t_dist,
     }
+    if svc is not None:
+        s = svc.stats
+        stats["stream_steps"] = s["step"]
+        stats["stream_rows_seen"] = s["rows_seen"]
+        stats["stream_refreshes"] = s["refreshes"]
+        stats["stream_cadence"] = s["cadence"]
+        stats["stream_staleness"] = s["staleness"]
+        stats["stream_last_jump"] = s["last_jump"]
+        stats["stream_drift"] = svc.drift()
+        stats["replans"] = s["replans"]
+        if s["events"]:
+            stats["events"] = s["events"]
     if report is not None:
         stats["replans"] = report.replans
         stats["final_m_active"] = report.final_membership.m_active
@@ -247,7 +302,18 @@ def main():
                          "refinement round t (e.g. '2:1', or '2:1,5:3'); "
                          "the run completes over the survivors, re-planning "
                          "the collective at the reduced shard count "
-                         "(repro.runtime.elastic)")
+                         "(repro.runtime.elastic); with --stream, t counts "
+                         "observe steps and the service refreshes "
+                         "elastically on the death")
+    ap.add_argument("--stream", type=int, default=None, metavar="STEPS",
+                    help="streaming lane (repro.stream): feed the same "
+                         "rows in STEPS per-shard chunks through a "
+                         "SubspaceService — cadence-triggered Procrustes "
+                         "refreshes with the previous basis as reference — "
+                         "and report the served basis plus stream_* stats")
+    ap.add_argument("--cadence", type=int, default=None,
+                    help="refresh every CADENCE observe steps in the "
+                         "--stream lane (default: STEPS // 4)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
     plan = "auto" if args.plan == "auto" else None
@@ -260,6 +326,7 @@ def main():
         orth=args.orth, topology=args.topology, comm_bits=args.comm_bits,
         plan=plan, explain=args.explain, calibration=cal,
         fail_at=args.fail_at, pods=args.pods,
+        stream=args.stream, cadence=args.cadence,
     )
     for k, v in stats.items():
         print(f"{k}: {v}")

@@ -1,12 +1,21 @@
-"""Serving driver: batched prefill + greedy decode.
+"""Serving driver: LM decode and the streaming-subspace query front end.
 
-``python -m repro.launch.serve --arch <id> --prompt-len 64 --gen 32``
+Two lanes:
 
-Serves the reduced config on the host mesh (the full configs are exercised
-via the dry-run); demonstrates the production serve path: jitted prefill,
-donated-cache decode steps, batched requests in lockstep (continuous
-batching, i.e. ragged positions per row, is scoped out and noted in
-DESIGN.md).
+  * ``python -m repro.launch.serve --arch <id> --prompt-len 64 --gen 32``
+    serves the reduced LM config on the host mesh (the full configs are
+    exercised via the dry-run): jitted prefill, donated-cache decode
+    steps, batched requests in lockstep.  Continuous batching (ragged
+    positions per row) remains scoped out of the LM lane.
+
+  * ``python -m repro.launch.serve --subspace --queries 4096`` serves the
+    *paper's own* artifact — the distributed eigenspace estimate — as a
+    query endpoint (``repro.stream.SubspaceService``): a synthetic
+    per-shard row stream feeds the service's accumulators, cadence-
+    triggered Procrustes refreshes keep the basis fresh (previous basis
+    as reference, so clients never see a sign/rotation flip), and query
+    batches project onto the double-buffered served basis with zero
+    collectives on the hot path (DESIGN.md §10).
 """
 
 from __future__ import annotations
@@ -84,15 +93,108 @@ def serve(
     return np.stack(out_tokens, axis=1), {"prefill_s": t_prefill, "decode_s": t_decode}
 
 
+def serve_subspace(
+    *,
+    d: int = 256,
+    r: int = 8,
+    steps: int = 16,
+    rows_per_step: int = 128,
+    cadence: int = 4,
+    batch: int = 256,
+    queries: int = 4096,
+    delta: float = 0.2,
+    mesh=None,
+    topology: str | None = None,
+    comm_bits=None,
+    plan=None,
+    seed: int = 0,
+):
+    """Serve the streaming eigenspace estimate: ingest, refresh, project.
+
+    A synthetic spiked-covariance stream (``repro.data.synthetic``) feeds
+    every shard ``rows_per_step`` rows per step; the service refreshes on
+    the cadence; then ``queries`` query rows are projected through the
+    served basis in ``batch``-row waves and the projection throughput is
+    reported next to the refresh stats.
+    """
+    from repro.comm.topology import DATA_AXIS
+    from repro.data import synthetic as syn
+    from repro.launch.mesh import make_aggregation_mesh
+    from repro.stream import SubspaceService
+
+    mesh = mesh or make_aggregation_mesh()
+    m = mesh.shape[DATA_AXIS] * mesh.shape.get("pod", 1)
+    svc = SubspaceService(
+        mesh, d, r, cadence=cadence, topology=topology,
+        comm_bits=comm_bits, plan=plan,
+    )
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    tau = syn.spectrum_m1(d, r, delta=delta)
+    _, _, factor = syn.covariance_from_spectrum(k1, tau)
+    rows = syn.sample_gaussian(k2, factor, m * steps * rows_per_step)
+    stream = rows.reshape(steps, m, rows_per_step, d)
+
+    t0 = time.perf_counter()
+    for t in range(steps):
+        svc.observe(stream[t])
+    jax.block_until_ready(svc.basis)
+    t_ingest = time.perf_counter() - t0
+
+    qs = syn.sample_gaussian(k3, factor, queries)
+    out = None
+    t0 = time.perf_counter()
+    for lo in range(0, queries, batch):
+        out = svc.project(qs[lo:lo + batch])
+    jax.block_until_ready(out)
+    t_query = time.perf_counter() - t0
+    qps = queries / max(t_query, 1e-9)
+    stats = dict(svc.stats)
+    stats.update({
+        "ingest_s": t_ingest,
+        "query_s": t_query,
+        "queries_per_s": qps,
+    })
+    log.info(
+        "subspace serve: %d steps ingested in %.3fs (%d refreshes); "
+        "%d queries in %.3fs (%.0f q/s, staleness=%d)",
+        steps, t_ingest, stats["refreshes"], queries, t_query, qps,
+        stats["staleness"],
+    )
+    return svc, stats
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--subspace", action="store_true",
+                    help="serve the streaming eigenspace estimate "
+                         "(repro.stream.SubspaceService) instead of an LM: "
+                         "synthetic stream in, cadence refreshes, batched "
+                         "query projection throughput out")
+    ap.add_argument("--d", type=int, default=256)
+    ap.add_argument("--r", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--rows-per-step", type=int, default=128)
+    ap.add_argument("--cadence", type=int, default=4)
+    ap.add_argument("--queries", type=int, default=4096)
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+    if args.subspace:
+        _, stats = serve_subspace(
+            d=args.d, r=args.r, steps=args.steps,
+            rows_per_step=args.rows_per_step, cadence=args.cadence,
+            batch=max(args.batch, 64), queries=args.queries,
+        )
+        for k, v in stats.items():
+            print(f"{k}: {v}")
+        return
+    if not args.arch:
+        ap.error("--arch is required (or pass --subspace)")
     toks, stats = serve(
         args.arch,
         batch=args.batch,

@@ -20,7 +20,11 @@ which shard's basis is broadcast) either collapses (paper Fig. 1) or makes
 the low-rank moments/error-feedback state inconsistent across refreshes.
 Aligning to the PREVIOUS period's basis (the ``ref`` argument the collective
 accepts) additionally keeps Adam's low-rank moments valid across refreshes —
-a beyond-paper use of the same primitive.
+a beyond-paper use of the same primitive.  The streaming subspace service
+(``repro.stream.service``) leans on the same ref-continuity contract for its
+serve path: its refreshes pass the previously *served* basis as ``ref`` so
+clients never observe a sign/rotation flip, and ``tests/test_stream.py``
+pins the contract as a regression test for both consumers.
 
 All functions here run INSIDE ``shard_map`` with a manual ``data`` axis
 (see launch/train.py's hybrid train_step).

@@ -46,7 +46,13 @@ from repro.compat import shard_map
 from repro.plan.planner import Plan, plan_aggregation
 from repro.runtime.straggler import StepTimer
 
-__all__ = ["RoundEvent", "ElasticReport", "replan", "elastic_pca"]
+__all__ = [
+    "RoundEvent",
+    "ElasticReport",
+    "replan",
+    "transition_reason",
+    "elastic_pca",
+]
 
 
 def replan(
@@ -64,6 +70,7 @@ def replan(
     comm_bits=None,
     ref_broadcast: bool = True,
     calibration=None,
+    pods: Optional[int] = None,
 ) -> Plan:
     """The degradation re-plan hook: price the cube at the survivor count.
 
@@ -71,15 +78,40 @@ def replan(
     — the fresh m'-shard job the masked round computes.  Knob arguments
     are pins exactly as in ``plan_aggregation`` (an infeasible pin, e.g.
     int8 psum past the m' headroom bound, is annotated or dropped by the
-    planner's usual rules).  Both the elastic runner's membership-change
-    path and its straggler-escalation path call this.
+    planner's usual rules; ``pods`` keeps a hier pin priceable).  The
+    elastic runner's membership-change path, its straggler-escalation
+    path, and the streaming service's elastic refresh
+    (``repro.stream.service``) all call this.
+
+    With ``pods`` pinned the price point is the *physical* m: the
+    hierarchical schedule keeps running on the full (pods x local) mesh
+    with the dead shard masked inside its pod — the survivor count does
+    not re-tile the mesh, so pricing at m' would reject perfectly valid
+    degraded states (m'=7 on a 4x2 mesh).
     """
     return plan_aggregation(
-        m=membership.m_active, d=d, r=r, n_iter=n_iter,
+        m=membership.m if pods else membership.m_active, d=d, r=r,
+        n_iter=n_iter,
         device_kind=device_kind, backend=backend, topology=topology,
         polar=polar, orth=orth, ring_chunk=ring_chunk, comm_bits=comm_bits,
-        ref_broadcast=ref_broadcast, calibration=calibration,
+        ref_broadcast=ref_broadcast, calibration=calibration, pods=pods,
     )
+
+
+def transition_reason(
+    prev: Optional[Membership], new: Membership
+) -> Optional[str]:
+    """Classify a membership edge: "failure" | "recovery" | None (no change).
+
+    A transition with *any* newly dead shard is a "failure" (even if other
+    shards recovered in the same step — the failure is what invalidates
+    the error-feedback residual and the headroom bound); a pure rejoin is
+    a "recovery".  ``prev=None`` (no prior membership) is not an edge.
+    """
+    if prev is None or new == prev:
+        return None
+    newly_dead = set(new.dead) - set(prev.dead)
+    return "failure" if newly_dead else "recovery"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -257,9 +289,8 @@ def elastic_pca(
         remaining = n_iter - t
         if cur_mem is None:
             reason = "initial"
-        elif mem != cur_mem:
-            newly_dead = set(mem.dead) - set(cur_mem.dead)
-            reason = "failure" if newly_dead else "recovery"
+        elif transition_reason(cur_mem, mem) is not None:
+            reason = transition_reason(cur_mem, mem)
         elif pending["replan"]:
             reason = "straggler"
         else:

@@ -1,0 +1,29 @@
+"""Streaming subspace service: the paper's estimator as a long-lived job.
+
+The one-shot estimator (``repro.core.distributed.distributed_pca``) sees
+all rows at once; production sees them arrive.  This package keeps the
+estimator live over a stream:
+
+  * ``repro.stream.accumulator`` — per-shard merge-able second-moment
+    state (``update`` / ``merge`` / ``to_cov``): feeding the same rows in
+    any chunking yields the covariance ``empirical_covariance`` computes
+    one-shot, so every downstream aggregation contract carries over;
+  * ``repro.stream.service`` — ``SubspaceService``: periodic
+    Procrustes re-alignment refreshes (previous basis as ``ref``, the
+    machinery ``optim.eigen_compress`` already trusts across refreshes),
+    a drift/cadence trigger, elastic membership, and a double-buffered,
+    collective-free query front end (``project``).
+
+Layering: ``stream`` sits above ``core`` / ``comm`` / ``plan`` /
+``runtime`` and below ``launch`` (the serve/eigen/dryrun drivers wire it
+to CLIs).  Design rationale: DESIGN.md §10.
+"""
+
+from repro.stream.accumulator import (  # noqa: F401
+    Accumulator,
+    init_state,
+    merge,
+    to_cov,
+    update,
+)
+from repro.stream.service import SubspaceService, basis_jump  # noqa: F401

@@ -1,0 +1,169 @@
+"""Incremental per-shard covariance state for the streaming service.
+
+The paper's local stage is a one-shot Gram: ``empirical_covariance(x) =
+(1/n) X^T X`` over all rows a shard will ever see.  A streaming shard
+sees those rows in chunks, so the local stage becomes *state*: the
+running row count, row sum, and unnormalized second moment
+
+    state = (n, s, G)     s = sum_i x_i,   G = sum_i x_i x_i^T
+
+— the Welford/Chan parallel form with the mean pinned at the paper's
+zero-mean contract, which makes both transitions exact additions:
+
+    update(state, X_k):  (n + n_k,  s + sum(X_k),  G + X_k^T X_k)
+    merge(a, b):         (n_a + n_b,  s_a + s_b,   G_a + G_b)
+
+so update/merge commute and associate up to float addition order, and a
+stream fed the same rows in *any* chunking lands on the covariance the
+one-shot Gram computes (``tests/test_stream.py`` pins this bit-for-bit
+in f64 on integer-valued rows, and to 1e-6 in f32).  Keeping the raw
+moment instead of the centered M2 is deliberate: re-centering on merge
+(Chan's cross term) would trade exact additivity for a numerical-
+stability property the zero-mean setting doesn't need.
+
+Accumulation dtype: every chunk is cast to the state dtype before the
+Gram product (``repro.core.covariance.gram_increment``), so a bf16
+payload accumulates at exact f32 — the same dtype rule the one-shot
+path follows — regardless of how narrow the wire/payload dtype is.
+
+The functional core (``init_state`` / ``update`` / ``merge`` /
+``to_cov``) is pure and pytree-native (a flat dict), usable under jit /
+vmap / shard_map; the ``Accumulator`` class wraps one shard's state with
+a donated-buffer jitted update so a long-lived service reuses its (d, d)
+state buffers in place instead of reallocating per chunk.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.covariance import gram_increment
+
+__all__ = ["Accumulator", "init_state", "update", "merge", "to_cov"]
+
+State = Dict[str, jax.Array]
+
+
+def init_state(d: int, *, dtype=jnp.float32) -> State:
+    """Empty accumulator state over feature dimension ``d``.
+
+    ``dtype`` is the accumulation dtype (f32 default; pass f64 under
+    x64 for the bit-exact oracle tests).  Narrower payloads upcast into
+    it; it never follows the payload down.
+    """
+    dtype = jnp.dtype(dtype)
+    if dtype not in (jnp.dtype(jnp.float32), jnp.dtype(jnp.float64)):
+        raise ValueError(
+            f"accumulator state must be f32 or f64 (got {dtype}); payload "
+            "dtypes narrower than the state upcast on update"
+        )
+    return {
+        "count": jnp.zeros((), dtype),
+        "sum": jnp.zeros((d,), dtype),
+        "gram": jnp.zeros((d, d), dtype),
+    }
+
+
+def update(state: State, batch: jax.Array) -> State:
+    """Fold a chunk of rows ``batch`` (n_k, d) into the state.
+
+    Pure and shape-polymorphic over n_k (each distinct chunk length is
+    its own jit specialization); an empty chunk (0, d) is the exact
+    identity — the Gram of zero rows is a zero matrix and adding it
+    changes no bits.
+    """
+    dt = state["gram"].dtype
+    xf = batch.astype(dt)
+    return {
+        "count": state["count"] + jnp.asarray(batch.shape[0], dt),
+        "sum": state["sum"] + jnp.sum(xf, axis=0),
+        "gram": state["gram"] + gram_increment(batch, dtype=dt),
+    }
+
+
+def merge(a: State, b: State) -> State:
+    """Combine two accumulators over disjoint row sets (exact addition)."""
+    if a["gram"].shape != b["gram"].shape:
+        raise ValueError(
+            f"cannot merge accumulators over different feature dims "
+            f"({a['gram'].shape[0]} vs {b['gram'].shape[0]})"
+        )
+    return {k: a[k] + b[k].astype(a[k].dtype) for k in ("count", "sum", "gram")}
+
+
+def to_cov(state: State, *, center: bool = False) -> jax.Array:
+    """The (d, d) covariance the accumulated rows imply.
+
+    ``center=False`` (default) is the paper's zero-mean second moment
+    ``G / n`` — exactly what ``empirical_covariance`` returns for the
+    same rows fed one-shot.  ``center=True`` subtracts the empirical
+    mean (``G/n - mu mu^T``), for streams that are not pre-centered.
+    Raises on an empty accumulator: no rows imply no covariance.
+    """
+    n = state["count"]
+    cov = state["gram"] / n
+    if center:
+        mu = state["sum"] / n
+        cov = cov - jnp.outer(mu, mu)
+    return cov
+
+
+# One donated-buffer jit per (state dtype x chunk shape): the state
+# buffers are donated, so a long-lived accumulator updates in place.
+_update_jit = jax.jit(update, donate_argnums=0)
+
+
+class Accumulator:
+    """One shard's streaming covariance state (OO wrapper over the pure core).
+
+    >>> acc = Accumulator(d=64)
+    >>> acc.update(x_chunk)          # (n_k, 64), any float dtype
+    >>> acc.merge(other)             # fold a sibling accumulator in
+    >>> cov = acc.to_cov()           # (64, 64) state-dtype covariance
+
+    ``update`` runs through a donated jit, so the (d, d) Gram buffer is
+    reused in place; ``merge`` leaves ``other`` intact.
+    """
+
+    def __init__(self, d: int, *, dtype=jnp.float32, state: State | None = None):
+        self._state = init_state(d, dtype=dtype) if state is None else state
+
+    # -- streaming transitions --------------------------------------------
+
+    def update(self, batch: jax.Array) -> "Accumulator":
+        if batch.ndim != 2 or batch.shape[1] != self.d:
+            raise ValueError(
+                f"expected a (n, {self.d}) chunk, got {batch.shape}"
+            )
+        self._state = _update_jit(self._state, batch)
+        return self
+
+    def merge(self, other: "Accumulator") -> "Accumulator":
+        self._state = merge(self._state, other._state)
+        return self
+
+    def to_cov(self, *, center: bool = False) -> jax.Array:
+        if int(self.count) == 0:
+            raise ValueError("empty accumulator has no covariance")
+        return to_cov(self._state, center=center)
+
+    # -- views -------------------------------------------------------------
+
+    @property
+    def state(self) -> State:
+        return self._state
+
+    @property
+    def d(self) -> int:
+        return self._state["gram"].shape[0]
+
+    @property
+    def dtype(self):
+        return self._state["gram"].dtype
+
+    @property
+    def count(self) -> jax.Array:
+        return self._state["count"]

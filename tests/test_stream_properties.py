@@ -1,0 +1,96 @@
+"""Hypothesis property suite for the streaming accumulator.
+
+The algebra ``repro.stream.accumulator`` claims — update/merge are exact
+additions over the (count, sum, gram) state — is checked as *laws*, not
+examples: merge associativity, chunk-order invariance, empty-chunk /
+single-row identities, and the dtype rule (a bf16 payload accumulates at
+exact f32 state).  Integer-valued rows make every partial sum exactly
+representable, so the laws hold bit-for-bit, not just to a tolerance.
+
+Guarded like the other property suites (module-level importorskip): the
+example-based streaming coverage lives in tests/test_stream.py and runs
+without the 'test' extra.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the 'test' extra")
+from hypothesis import given, settings, strategies as st
+
+from repro.stream import init_state, merge, to_cov, update
+
+pytestmark = pytest.mark.streaming
+
+
+def _int_rows(seed: int, n: int, d: int) -> np.ndarray:
+    """Integer-valued rows: every Gram partial sum is an exact integer."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(-8, 9, size=(n, d)).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), d=st.integers(1, 12),
+       sizes=st.lists(st.integers(0, 24), min_size=3, max_size=3))
+def test_merge_associative_exact(seed, d, sizes):
+    """(a + b) + c == a + (b + c), exactly, on integer-valued rows."""
+    xs = [_int_rows(seed + i, n, d) for i, n in enumerate(sizes)]
+    a, b, c = (update(init_state(d), jnp.asarray(x)) for x in xs)
+    left, right = merge(merge(a, b), c), merge(a, merge(b, c))
+    for k in ("count", "sum", "gram"):
+        np.testing.assert_array_equal(np.asarray(left[k]),
+                                      np.asarray(right[k]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), k=st.integers(1, 6),
+       perm_seed=st.integers(0, 2**16))
+def test_chunk_order_invariance_exact(seed, k, perm_seed):
+    """Feeding the same chunks in any order lands on identical state bits
+    (integer-valued rows make every partial sum exact)."""
+    d = 10
+    chunks = np.array_split(_int_rows(seed, 60, d), k)
+    order = np.random.default_rng(perm_seed).permutation(len(chunks))
+    s1, s2 = init_state(d), init_state(d)
+    for c in chunks:
+        s1 = update(s1, jnp.asarray(c))
+    for i in order:
+        s2 = update(s2, jnp.asarray(chunks[i]))
+    np.testing.assert_array_equal(np.asarray(s1["gram"]),
+                                  np.asarray(s2["gram"]))
+    np.testing.assert_array_equal(np.asarray(s1["count"]),
+                                  np.asarray(s2["count"]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), d=st.integers(1, 12))
+def test_empty_and_single_row_edges(seed, d):
+    """(0, d) chunks are the exact identity; a single row's covariance is
+    its outer product / 1."""
+    s = update(init_state(d), jnp.zeros((0, d), jnp.float32))
+    assert int(s["count"]) == 0
+    np.testing.assert_array_equal(np.asarray(s["gram"]), np.zeros((d, d)))
+    row = _int_rows(seed, 1, d)
+    s = update(s, jnp.asarray(row))
+    s = update(s, jnp.zeros((0, d), jnp.float32))  # identity after, too
+    np.testing.assert_array_equal(np.asarray(to_cov(s)),
+                                  np.outer(row[0], row[0]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 32))
+def test_bf16_payload_accumulates_at_f32(seed, n):
+    """The state dtype never follows the payload down: a bf16 chunk is
+    upcast before the Gram product, so small-integer rows (exact in bf16)
+    accumulate bit-identically to their f32 twins."""
+    d = 8
+    x = _int_rows(seed, n, d)  # |x| <= 8: exact in bf16
+    s16 = update(init_state(d), jnp.asarray(x, jnp.bfloat16))
+    s32 = update(init_state(d), jnp.asarray(x))
+    assert s16["gram"].dtype == jnp.float32
+    assert s16["sum"].dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(s16["gram"]),
+                                  np.asarray(s32["gram"]))
